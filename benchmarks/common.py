@@ -1,0 +1,161 @@
+"""Shared benchmark scaffolding: the four accuracy arms of CAMEL Fig 20/24
+(DuDNN / FR / CA / BO) at laptop scale on the synthetic bigram-LM task.
+
+The scaled-down protocol: "pretrain" a small dense backbone on the task
+distribution, freeze it, then train each arm's adapter for N steps with the
+same budget.  The paper's qualitative claim to reproduce (Table II):
+DuDNN ≈ FR  ≫  CA  ≫  BO.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import LayerSpec, ModelConfig
+from repro.core import duplex as dx
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import layers as L, registry, transformer as T
+from repro.optim import AdamWConfig
+from repro.train import train_step as ts
+from repro.train.losses import lm_cross_entropy
+
+P32 = L.Policy(compute_dtype=jnp.float32)
+
+BB_CFG = ModelConfig(
+    name="bench-backbone", family="dense", vocab=256,
+    d_model=64, n_layers=4, pattern=(LayerSpec("attn", "dense"),),
+    n_heads=4, n_kv=4, head_dim=16, d_ff=128, vocab_pad_multiple=16,
+).validate()
+
+DATA = DataConfig(vocab=256, seq_len=64, batch_per_host=8, seed=0)
+
+
+class _Entry:
+    module = T
+    full = BB_CFG
+    smoke = BB_CFG
+
+    @staticmethod
+    def frontend_shape(cfg, batch):
+        return None
+
+
+def pretrain_backbone(steps: int = 150, key: int = 0):
+    """The offline-pretrained backbone (paper §III-A)."""
+    tcfg = ts.TrainConfig(mode="full", opt=AdamWConfig(weight_decay=0.0),
+                          lr=3e-3)
+    state = ts.init_state(jax.random.PRNGKey(key), _Entry, BB_CFG, tcfg, P32)
+    step = jax.jit(ts.make_train_step(_Entry, BB_CFG, tcfg, P32))
+    src = SyntheticLM(DATA)
+    for i in range(steps):
+        b = src.batch(i)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+    return state["backbone"], float(m["loss"])
+
+
+def eval_arm(loss_fn, params, n_batches: int = 8, offset: int = 10_000):
+    src = SyntheticLM(DATA)
+    tot, acc = 0.0, 0.0
+    for i in range(n_batches):
+        b = {k: jnp.asarray(v) for k, v in src.batch(offset + i).items()}
+        l, a = loss_fn(params, b)
+        tot += float(l)
+        acc += float(a)
+    return tot / n_batches, acc / n_batches
+
+
+def duplex_cfg(pool: int = 4, use_norm: bool = False,
+               bfp: bool = True) -> dx.DuplexConfig:
+    return dx.DuplexConfig(
+        n_blocks=2, d_branch=32, pool_factor=pool, branch_heads=2,
+        use_norm=use_norm,
+        bfp=L.BFPPolicy(enabled=bfp, group=(3, 3)))
+
+
+def train_arm(arm: str, backbone, steps: int = 200, key: int = 1,
+              dcfg: dx.DuplexConfig | None = None):
+    """Train one accuracy arm; returns (val_loss, val_acc, train_time_s).
+
+    arms: duplex (taps from all depths) | chain (taps only from the final
+    block — the CA baseline) | branch_only (zeroed taps & no backbone
+    correction target — BO) | full (FR: finetune the whole backbone).
+    """
+    dcfg = dcfg or duplex_cfg()
+    src = SyntheticLM(DATA)
+
+    if arm == "full":
+        tcfg = ts.TrainConfig(mode="full", opt=AdamWConfig(weight_decay=0.0),
+                              lr=1e-3)
+        state = ts.init_state(jax.random.PRNGKey(key), _Entry, BB_CFG, tcfg,
+                              P32)
+        state["backbone"] = jax.tree_util.tree_map(jnp.asarray, backbone)
+        step = jax.jit(ts.make_train_step(_Entry, BB_CFG, tcfg, P32))
+        t0 = time.time()
+        for i in range(steps):
+            b = {k: jnp.asarray(v) for k, v in src.batch(i).items()}
+            state, m = step(state, b)
+        dt = time.time() - t0
+
+        def loss_fn(params, batch):
+            out = T.forward(params, BB_CFG, batch["tokens"], policy=P32)
+            logits = T.lm_logits(params, BB_CFG, out["hidden"], P32)
+            _, met = lm_cross_entropy(logits, batch["labels"])
+            return met["loss"], met["accuracy"]
+
+        l, a = eval_arm(loss_fn, state["backbone"])
+        return l, a, dt
+
+    n_rep = BB_CFG.n_rep
+    if arm not in ("duplex", "chain", "branch_only"):
+        raise ValueError(arm)
+    idx = ts.tap_indices(n_rep, dcfg.n_blocks)
+
+    branch = dx.duplex_init(jax.random.PRNGKey(key), dcfg, BB_CFG.d_model)
+    from repro.optim import opt_init, opt_update
+    opt_cfg = AdamWConfig(weight_decay=0.0)
+    opt = opt_init(opt_cfg, branch)
+
+    def loss_full(branch, batch):
+        out = T.forward(backbone, BB_CFG, batch["tokens"], collect_taps=True,
+                        tap_indices=idx, tap_pool=dcfg.pool_factor,
+                        policy=P32)
+        taps = out["taps"]
+        if arm in ("branch_only", "chain"):
+            # no intermediate-depth knowledge transfer (Fig 20 CA/BO)
+            taps = jax.tree_util.tree_map(jnp.zeros_like, taps)
+        # CA: the branch is chained AFTER the backbone — it consumes the
+        # backbone output and fully replaces the head (no additive support)
+        emb_in = out["hidden"] if arm == "chain" else out["emb"]
+        corr = dx.duplex_apply(branch, dcfg, emb_in, taps, policy=P32,
+                               taps_pooled=True)
+        if arm == "duplex":
+            hidden = jax.lax.stop_gradient(out["hidden"]) + corr
+        else:
+            hidden = corr
+        logits = T.lm_logits(backbone, BB_CFG, hidden, P32)
+        loss, met = lm_cross_entropy(logits, batch["labels"])
+        return loss, met
+
+    grad_fn = jax.value_and_grad(loss_full, has_aux=True)
+
+    @jax.jit
+    def step(branch, opt, batch):
+        (loss, met), g = grad_fn(branch, batch)
+        new_b, new_o, _ = opt_update(opt_cfg, g, opt, branch, 3e-3)
+        return new_b, new_o, met
+
+    t0 = time.time()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in src.batch(i).items()}
+        branch, opt, met = step(branch, opt, b)
+    dt = time.time() - t0
+
+    def eval_fn(params, batch):
+        _, met = loss_full(params, batch)
+        return met["loss"], met["accuracy"]
+
+    l, a = eval_arm(eval_fn, branch)
+    return l, a, dt

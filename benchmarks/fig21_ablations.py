@@ -1,0 +1,39 @@
+"""Fig 21 (scaled down): (a) pooling-factor ablation — halving the pool
+factor quadruples branch compute for ~no accuracy gain; (b) norm-free branch
+matches the normalized branch under backbone guidance."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+
+def run() -> list[str]:
+    backbone, _ = common.pretrain_backbone(steps=150)
+    rows = []
+
+    # (a) pooling: pool=8 ("7×7") vs pool=4 ("14×14" — 4× the branch tokens)
+    res = {}
+    for pool in (8, 4):
+        t0 = time.time()
+        loss, acc, dt = common.train_arm(
+            "duplex", backbone, steps=200, dcfg=common.duplex_cfg(pool=pool))
+        res[pool] = (loss, acc, dt)
+        rows.append(f"fig21a/pool{pool},{dt*1e6/200:.0f},"
+                    f"loss={loss:.4f};acc={acc:.4f}")
+    gain = res[8][0] - res[4][0]     # loss delta from 4× more branch compute
+    rows.append(f"fig21a/verdict,0,loss_gain_from_4x_compute={gain:.4f}")
+
+    # (b) normalization in the branch
+    for use_norm in (False, True):
+        loss, acc, dt = common.train_arm(
+            "duplex", backbone, steps=200,
+            dcfg=common.duplex_cfg(use_norm=use_norm))
+        tag = "norm" if use_norm else "norm_free"
+        rows.append(f"fig21b/{tag},{dt*1e6/200:.0f},"
+                    f"loss={loss:.4f};acc={acc:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,18 @@
+"""Fig 22: simulated 3T eDRAM worst-case retention vs temperature."""
+from __future__ import annotations
+
+from repro.core import edram as ed
+
+
+def run() -> list[str]:
+    rows = []
+    for t in (-30, -10, 10, 30, 50, 70, 90, 100):
+        rows.append(f"fig22/retention@{t}C,0,{ed.retention_s(t)*1e6:.2f}us")
+    ok = abs(ed.retention_s(100) - 3.4e-6) < 1e-9 and \
+        abs(ed.retention_s(-30) - 30e-6) < 1e-9
+    rows.append(f"fig22/calibration,0,endpoints_match_paper={ok}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

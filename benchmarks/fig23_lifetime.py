@@ -1,0 +1,30 @@
+"""Fig 23(a): per-layer maximum data lifetime of Branch-6+ResNet-50 during
+training, against the 3.4 µs @ 100 °C retention floor — the co-design
+criterion that makes eDRAM refresh-free."""
+from __future__ import annotations
+
+from repro.core import edram as ed, lifetime as lt
+
+
+def run() -> list[str]:
+    # Branch-6 + ResNet-50-scale backbone, pooled 7×7 (paper §VI-B/D)
+    blocks = lt.duplex_block_specs(n_blocks=6, batch=1, spatial=7,
+                                   c_branch=48, c_backbone=160)
+    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
+    R = lt.array_throughput(6, 500e6, specs)
+    fwd = lt.forward_lifetimes(blocks, R)
+    bwd = lt.backward_lifetimes(blocks, R)
+    floor = ed.retention_s(100.0)
+    rows = []
+    worst = 0.0
+    for l, (f, b) in enumerate(zip(fwd, bwd)):
+        life = max(max(f.values()), max(b.values()))
+        worst = max(worst, life)
+        rows.append(f"fig23/layer{l},0,lifetime={life*1e6:.3f}us")
+    rows.append(f"fig23/criterion,0,max={worst*1e6:.3f}us;"
+                f"retention@100C={floor*1e6:.2f}us;refresh_free={worst < floor}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

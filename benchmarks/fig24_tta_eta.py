@@ -1,0 +1,45 @@
+"""Fig 24: TTA/ETA of the four system arms across DNN scales.
+
+Iteration counts encode the convergence behaviour measured in
+benchmarks/table2 at small scale (CA needs ~2.5× the iterations to the
+target; BO does not reach it — the paper drops those bars too).
+"""
+from __future__ import annotations
+
+from repro.core import hwmodel as hw, lifetime as lt
+
+# (label, branch blocks, branch ch, backbone ch) ~ paper's B-x + ResNet-y
+ARCHS = [
+    ("B4+R18", 4, 32, 64),
+    ("B5+R34", 5, 40, 96),
+    ("B6+R50", 6, 48, 160),
+    ("B6+VGG16", 6, 48, 128),
+]
+ITERS_TARGET = 1000            # iterations for DuDNN/FR to hit the target
+ITERS_CHAIN = 2500             # CA's inferior convergence (§VI-F)
+
+
+def run() -> list[str]:
+    rows = []
+    for label, nb, cb, ck in ARCHS:
+        blocks = lt.duplex_block_specs(nb, batch=48, spatial=7,
+                                       c_branch=cb, c_backbone=ck)
+        camel = hw.tta_eta(hw.SystemConfig(), blocks, ITERS_TARGET,
+                           reversible=True)
+        fr = hw.tta_eta(hw.SRAM_ONLY, blocks, ITERS_TARGET,
+                        reversible=False)
+        ca = hw.tta_eta(hw.SystemConfig(), blocks, ITERS_CHAIN,
+                        reversible=True)
+        tta_x = fr["tta_s"] / camel["tta_s"]
+        eta_x = fr["eta_j"] / camel["eta_j"]
+        rows.append(
+            f"fig24/{label},{camel['iteration'].latency_s*1e6:.1f},"
+            f"TTAxFR={tta_x:.2f};ETAxFR={eta_x:.2f};"
+            f"ETAxCA={ca['eta_j']/camel['eta_j']:.2f};"
+            f"refresh_free={camel['iteration'].refresh_free}")
+    rows.append("fig24/claim,0,paper=DuDNN+CAMEL best TTA & >=2x ETA")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

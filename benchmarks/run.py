@@ -1,0 +1,83 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (from the
+multi-pod dry-run artifacts) is appended when ``experiments/dryrun`` exists.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bfp_fidelity, fig21_ablations, fig22_retention,
+                        fig23_lifetime, fig24_tta_eta, table2_accuracy,
+                        table3_arraysize)
+
+SUITES = {
+    "table2": table2_accuracy.run,      # accuracy arms (slow-ish: trains)
+    "fig21": fig21_ablations.run,       # pooling / norm ablations
+    "fig22": fig22_retention.run,       # eDRAM retention curve
+    "fig23": fig23_lifetime.run,        # per-layer data lifetime
+    "fig24": fig24_tta_eta.run,         # TTA / ETA vs baselines
+    "table3": table3_arraysize.run,     # array size vs lifetime
+    "bfp": bfp_fidelity.run,            # §III-E fidelity + kernel timing
+}
+SLOW = {"table2", "fig21", "bfp"}       # these train models on CPU
+
+
+def _roofline_rows() -> list[str]:
+    from pathlib import Path
+    if not Path("experiments/dryrun").exists():
+        return ["roofline/skipped,0,no experiments/dryrun artifacts"]
+    from benchmarks import roofline
+    rows = []
+    for r in roofline.build_table("experiments/dryrun", mesh="pod"):
+        if r.get("bottleneck") in ("SKIP", "ERROR"):
+            rows.append(f"roofline/{r['arch']}/{r['shape']},0,"
+                        f"{r['bottleneck']}")
+            continue
+        rows.append(
+            f"roofline/{r['arch']}/{r['shape']},"
+            f"{r['step_s_bound']*1e6:.0f},"
+            f"bound={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args()
+
+    names = list(SUITES) if not args.only else args.only.split(",")
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in names:
+        if name == "roofline":
+            continue
+        if args.skip_slow and name in SLOW:
+            print(f"{name}/skipped,0,--skip-slow")
+            continue
+        t0 = time.time()
+        try:
+            for row in SUITES[name]():
+                print(row)
+            print(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},"
+                  f"ERROR:{type(e).__name__}")
+    if args.only is None or "roofline" in args.only:
+        for row in _roofline_rows():
+            print(row)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

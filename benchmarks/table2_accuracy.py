@@ -1,0 +1,38 @@
+"""Table II (scaled down): accuracy ordering DuDNN ≈ FR ≫ CA ≫ BO.
+
+Full CIFAR/Tiny-ImageNet training is out of scope on CPU; the protocol keeps
+the paper's *structure* (pretrained frozen backbone, equal adapter budgets,
+identical steps) on the synthetic bigram-LM task and validates the ordering
+the paper reports.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+
+def run() -> list[str]:
+    t0 = time.time()
+    backbone, pre_loss = common.pretrain_backbone(steps=150)
+    rows = []
+    results = {}
+    for arm in ("duplex", "full", "chain", "branch_only"):
+        loss, acc, dt = common.train_arm(arm, backbone, steps=200)
+        results[arm] = (loss, acc)
+        rows.append(f"table2/{arm},{dt*1e6/200:.0f},"
+                    f"loss={loss:.4f};acc={acc:.4f}")
+
+    # the paper's ordering (Table II): DuDNN ≈ FR  ≫  CA  ≫  BO
+    d, f = results["duplex"][0], results["full"][0]
+    c, b = results["chain"][0], results["branch_only"][0]
+    ok_df = d <= f * 1.15          # DuDNN within 15% of full finetune
+    ok_dc = d < c                  # beats chain
+    ok_cb = c < b                  # chain beats branch-only
+    rows.append(f"table2/ordering,{(time.time()-t0)*1e6:.0f},"
+                f"DuDNN~FR={ok_df};DuDNN<CA={ok_dc};CA<BO={ok_cb}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,28 @@
+"""Table III: data lifetime vs systolic-array size (normalized to 6×6) —
+sub-linear shrink because utilization drops on small layers."""
+from __future__ import annotations
+
+from repro.core import lifetime as lt
+
+
+def run() -> list[str]:
+    blocks = lt.duplex_block_specs(6, batch=48, spatial=7, c_branch=48,
+                                   c_backbone=160)
+    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
+    base = None
+    rows = []
+    for a in (6, 10, 12):
+        r = lt.array_throughput(a, 500e6, specs)
+        life = lt.max_data_lifetime(blocks, r)
+        if base is None:
+            base = life
+        ratio = life / base
+        ideal = (6 / a) ** 2
+        rows.append(f"table3/array{a}x{a},0,"
+                    f"lifetime={ratio:.2f}x;ideal={ideal:.2f}x;"
+                    f"sublinear={ratio > ideal}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,194 @@
+"""2D Block Floating-Point (BFP) quantization — CAMEL §III-E.
+
+A matrix is tiled into *square* 2D groups; each group shares one exponent and
+keeps per-element signed mantissas.  Squareness is the paper's point: it makes
+quantization commute with transposition, ``Q(Wᵀ) = Q(W)ᵀ``, so the backward
+pass (which needs ``Wᵀ`` and ``Aᵀ``, Table I) never re-quantizes.
+
+Paper-faithful format: 3×3 groups, 4-bit shared exponent, 1-bit sign + 5-bit
+mantissa  ⇒  58 bits / 9 values = 6.4 bits/value.
+
+TPU-native format (this framework's default for kernels): 32×32 or larger
+square groups aligned with the MXU 128×128 tile — the same transpose
+invariance holds for any square group (see DESIGN.md §2).
+
+This module is the **pure-jnp reference**; ``repro.kernels`` holds the Pallas
+TPU kernels validated against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import ceil_to
+
+# Paper constants (Section III-E).
+PAPER_GROUP: Tuple[int, int] = (3, 3)
+PAPER_EBITS: int = 4
+PAPER_MBITS: int = 5  # magnitude bits; sign is separate.
+
+# TPU-native default: square group aligned to MXU/VREG tiling.
+TPU_GROUP: Tuple[int, int] = (32, 32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BFPTensor:
+    """A 2D-BFP-quantized matrix (last two dims grouped).
+
+    ``mant``  int8  — signed mantissas, shape ``padded_shape``.
+    ``exp``   int8  — shared exponents, one per group:
+                      ``padded_shape[:-2] + (Mp/g1, Np/g2)``.
+    """
+
+    mant: jax.Array
+    exp: jax.Array
+    shape: Tuple[int, ...]        # logical (unpadded) shape
+    group: Tuple[int, int]
+    mbits: int
+
+    def tree_flatten(self):
+        return (self.mant, self.exp), (self.shape, self.group, self.mbits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mant, exp = children
+        shape, group, mbits = aux
+        return cls(mant, exp, shape, group, mbits)
+
+    @property
+    def transpose(self) -> "BFPTensor":
+        """Q(Wᵀ) = Q(W)ᵀ — the paper's transpose invariance (Fig 11)."""
+        g1, g2 = self.group
+        swap = lambda a: jnp.swapaxes(a, -1, -2)
+        return BFPTensor(
+            mant=swap(self.mant),
+            exp=swap(self.exp),
+            shape=self.shape[:-2] + (self.shape[-1], self.shape[-2]),
+            group=(g2, g1),
+            mbits=self.mbits,
+        )
+
+    @property
+    def bits_per_value(self) -> float:
+        g1, g2 = self.group
+        return (g1 * g2 * (1 + self.mbits) + PAPER_EBITS) / (g1 * g2)
+
+
+def _floor_exponent(amax: jax.Array) -> jax.Array:
+    """floor(log2(amax)) as int32; 0 → large negative (group of zeros)."""
+    _, e = jnp.frexp(amax)          # amax = m * 2^e with m in [0.5, 1)
+    e = e - 1                        # floor(log2 amax)
+    return jnp.where(amax > 0, e, jnp.full_like(e, -127)).astype(jnp.int32)
+
+
+def _pad2d(x: jax.Array, group: Tuple[int, int]) -> jax.Array:
+    g1, g2 = group
+    m, n = x.shape[-2:]
+    mp, np_ = ceil_to(m, g1), ceil_to(n, g2)
+    if (mp, np_) == (m, n):
+        return x
+    pads = [(0, 0)] * (x.ndim - 2) + [(0, mp - m), (0, np_ - n)]
+    return jnp.pad(x, pads)
+
+
+def bfp_quantize(
+    x: jax.Array,
+    group: Tuple[int, int] = PAPER_GROUP,
+    ebits: int = PAPER_EBITS,
+    mbits: int = PAPER_MBITS,
+) -> BFPTensor:
+    """Quantize the last two dims of ``x`` into 2D BFP groups (Fig 10)."""
+    if x.ndim < 2:
+        raise ValueError(f"BFP needs >=2 dims, got shape {x.shape}")
+    g1, g2 = group
+    orig_shape = x.shape
+    xp = _pad2d(x.astype(jnp.float32), group)
+    *lead, mp, np_ = xp.shape
+    xg = xp.reshape(*lead, mp // g1, g1, np_ // g2, g2)
+
+    amax = jnp.max(jnp.abs(xg), axis=(-3, -1), keepdims=True)
+    e = _floor_exponent(amax)
+    emin, emax = -(2 ** (ebits - 1)), 2 ** (ebits - 1) - 1
+    e = jnp.clip(e, emin, emax)
+
+    # scale so the largest element maps near the top of the mantissa range
+    scale = jnp.exp2((e - (mbits - 1)).astype(jnp.float32))
+    lim = 2**mbits - 1
+    m = jnp.clip(jnp.round(xg / scale), -lim, lim).astype(jnp.int8)
+
+    mant = m.reshape(*lead, mp, np_)
+    exp = e.squeeze((-3, -1)).astype(jnp.int8)
+    return BFPTensor(mant=mant, exp=exp, shape=orig_shape, group=group, mbits=mbits)
+
+
+def bfp_dequantize(t: BFPTensor, dtype=jnp.float32) -> jax.Array:
+    g1, g2 = t.group
+    *lead, mp, np_ = t.mant.shape
+    mg = t.mant.reshape(*lead, mp // g1, g1, np_ // g2, g2).astype(jnp.float32)
+    e = t.exp.astype(jnp.float32)[..., :, None, :, None]
+    scale = jnp.exp2(e - (t.mbits - 1))
+    xg = mg * scale
+    x = xg.reshape(*lead, mp, np_)
+    m, n = t.shape[-2:]
+    return x[..., :m, :n].astype(dtype)
+
+
+def _qdq(x, group, ebits, mbits):
+    return bfp_dequantize(bfp_quantize(x, group, ebits, mbits), dtype=x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def bfp_qdq(x: jax.Array,
+            group: Tuple[int, int] = PAPER_GROUP,
+            ebits: int = PAPER_EBITS,
+            mbits: int = PAPER_MBITS) -> jax.Array:
+    """Fake-quantize (quantize→dequantize) with a straight-through gradient.
+
+    This is how BFP training is injected into matmuls: operands pass through
+    ``bfp_qdq`` in the forward pass; the backward pass sees identity (the
+    standard STE used by the BFP-training literature the paper builds on).
+    """
+    return _qdq(x, group, ebits, mbits)
+
+
+def _qdq_fwd(x, group, ebits, mbits):
+    return _qdq(x, group, ebits, mbits), None
+
+
+def _qdq_bwd(group, ebits, mbits, res, g):
+    del group, ebits, mbits, res
+    return (g,)
+
+
+bfp_qdq.defvjp(_qdq_fwd, _qdq_bwd)
+
+
+def bfp_matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    group: Tuple[int, int] = PAPER_GROUP,
+    ebits: int = PAPER_EBITS,
+    mbits: int = PAPER_MBITS,
+    precision=None,
+) -> jax.Array:
+    """Reference BFP matmul: quantize both operands, multiply in f32.
+
+    Matches the PE-array semantics (Fig 5): within a group pair, mantissas
+    multiply-accumulate in fixed point and exponents add once — numerically
+    identical to dequantize-then-multiply in f32, which is what we do here.
+    """
+    aq = _qdq(a.astype(jnp.float32), group, ebits, mbits)
+    bq = _qdq(b.astype(jnp.float32), group, ebits, mbits)
+    return jnp.matmul(aq, bq, precision=precision)
+
+
+def quantization_rmse(x: jax.Array, **kw) -> jax.Array:
+    """RMS error of the BFP round-trip — used by fidelity benchmarks."""
+    y = _qdq(x.astype(jnp.float32), kw.get("group", PAPER_GROUP),
+             kw.get("ebits", PAPER_EBITS), kw.get("mbits", PAPER_MBITS))
+    return jnp.sqrt(jnp.mean((x - y) ** 2))

@@ -1,0 +1,159 @@
+"""Data-lifetime closed forms for DuDNN training (CAMEL §IV, eqs 3–10).
+
+Given per-layer op sizes and hardware throughput R (MAC/s), these compute
+the maximum time any tensor must survive in eDRAM between its producing
+write and its last read, under the paper's computation pattern
+(Figs 12–15).  ``core.schedule`` cross-validates these closed forms with a
+discrete-event simulation of the same pattern.
+
+Latencies (eqs 3–5): T = N / R with N = B·C_in·W·H·k² MACs·(C_out folded
+into R's utilization — the paper's formulation; we keep it verbatim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One CONV/matmul op (paper's notation, eqs 3-5)."""
+    batch: int
+    c_in: int
+    c_out: int
+    width: int
+    height: int
+    kernel: int = 1
+
+    @property
+    def macs(self) -> float:
+        return (self.batch * self.c_in * self.width * self.height
+                * self.kernel ** 2)
+
+    @property
+    def macs_out(self) -> float:
+        """Backward-pass size (eqs 7-8 use C_out in place of C_in)."""
+        return (self.batch * self.c_out * self.width * self.height
+                * self.kernel ** 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class DuBlockSpec:
+    """One DuDNN block: branch F1/F2 + backbone G (Fig 12a)."""
+    f1: OpSpec
+    f2: OpSpec
+    g: OpSpec
+
+
+def latency(n_macs: float, throughput: float) -> float:
+    return n_macs / throughput
+
+
+def forward_lifetimes(blocks: Sequence[DuBlockSpec], R: float) -> list[dict]:
+    """Per-layer {y1, y2, y3} forward data lifetimes (eq 6 terms, Fig 13)."""
+    L = len(blocks)
+    tG = [latency(b.g.macs, R) for b in blocks]
+    tF1 = [latency(b.f1.macs, R) for b in blocks]
+    tF2 = [latency(b.f2.macs, R) for b in blocks]
+    out = []
+    for l in range(L):
+        nxt = min(l + 1, L - 1)
+        last = l == L - 1
+        rec = {
+            "y3": tG[l] + tF1[l] + tF2[l],
+            # T_y1 = t5−t2 ; T_y2 = t5−t1 (paper Fig 13) — for the last layer
+            # the consumer is the loss head, bounded by its own block time.
+            "y1": tF1[l] + (0.0 if last else tG[nxt] + tF2[nxt]),
+            "y2": tF1[l] + tF2[l] + (0.0 if last else tG[nxt] + tF2[nxt]),
+        }
+        out.append(rec)
+    return out
+
+
+def backward_lifetimes(blocks: Sequence[DuBlockSpec], R: float) -> list[dict]:
+    """Per-layer {g1, g2, y1, y2} backward lifetimes (eq 9 terms, Fig 15).
+
+    eqs 7-8: T_{U2a}=T_{U2w}=T_{F2}, T_{U1a}=T_{U1w}=T_{F1}, evaluated with
+    output-channel sizes.
+    """
+    L = len(blocks)
+    tF1 = [latency(b.f1.macs_out, R) for b in blocks]
+    tF2 = [latency(b.f2.macs_out, R) for b in blocks]
+    out = []
+    for l in range(L):
+        prv = max(l - 1, 0)
+        first = l == 0
+        rec = {
+            # T_g1 = t9−t4 = U1a_l + U2w_{l−1} + U2a_{l−1} + F2_{l−1} + U1w_{l−1}
+            "g1": tF1[l] + (0.0 if first
+                            else 3 * tF2[prv] + tF1[prv]),
+            # T_g2 = t4−t1 = U2a_l + F2_l + U1w_l
+            "g2": 2 * tF2[l] + tF1[l],
+            # T_y1 = T_y2 = t7−t2 = F2_l + U1w_l + U1a_l + U2w_{l−1} + U2a_{l−1}
+            "y1": tF2[l] + 2 * tF1[l] + (0.0 if first else 2 * tF2[prv]),
+        }
+        rec["y2"] = rec["y1"]
+        out.append(rec)
+    return out
+
+
+def max_data_lifetime(blocks: Sequence[DuBlockSpec], R: float) -> float:
+    """eq 10: T_data = max(T_f, T_b)."""
+    tf = max(max(d.values()) for d in forward_lifetimes(blocks, R))
+    tb = max(max(d.values()) for d in backward_lifetimes(blocks, R))
+    return max(tf, tb)
+
+
+# --------------------------------------------------------------------------
+# systolic-array throughput with utilization (Table III's sub-linearity)
+# --------------------------------------------------------------------------
+
+def array_throughput(array: int, freq_hz: float, specs: Sequence[OpSpec],
+                     bfp_group: int = 3) -> float:
+    """Effective MAC/s of an ``array×array`` systolic core at ``freq_hz``.
+
+    Each cell multiplies a ``bfp_group²`` BFP group per cycle (§VI-D).  A
+    layer whose dims don't fill the array wastes cells — utilization =
+    useful MACs / (cells × occupied cycles), so doubling the array does NOT
+    halve latency for small layers (paper Table III).
+    """
+    peak = array * array * freq_hz * bfp_group * bfp_group
+    if not specs:
+        return peak
+    utils = []
+    for s in specs:
+        m = s.batch * s.width * s.height          # output rows
+        n = max(s.c_out, 1)                       # output cols
+        k = max(s.c_in * s.kernel ** 2, 1)
+        tile = array * bfp_group
+        cycles = -(-m // tile) * -(-n // tile) * k
+        useful = m * n * k
+        utils.append(useful / (cycles * tile * tile))
+    return peak * (sum(utils) / len(utils))
+
+
+def duplex_block_specs(n_blocks: int, batch: int, spatial: int,
+                       c_branch: int, c_backbone: int,
+                       kernel: int = 3) -> list[DuBlockSpec]:
+    """Paper-style CNN DuDNN blocks (Branch-L + ResNet-style backbone).
+
+    ``spatial`` is the pooled H=W fed to the branch (§III-C, 7×7 default).
+    """
+    f = OpSpec(batch=batch, c_in=c_branch, c_out=c_branch, width=spatial,
+               height=spatial, kernel=kernel)
+    g = OpSpec(batch=batch, c_in=c_backbone, c_out=c_backbone,
+               width=spatial * 2, height=spatial * 2, kernel=kernel)
+    return [DuBlockSpec(f1=f, f2=f, g=g) for _ in range(n_blocks)]
+
+
+def lm_branch_block_specs(n_blocks: int, batch: int, pooled_seq: int,
+                          d_branch: int, d_model: int) -> list[DuBlockSpec]:
+    """Map the LM duplex branch (attention F1 + MLP F2, §III) onto OpSpecs:
+    tokens = 1×pooled_seq 'spatial' positions, channels = widths."""
+    f1 = OpSpec(batch=batch, c_in=d_branch, c_out=d_branch,
+                width=pooled_seq, height=1, kernel=1)
+    f2 = OpSpec(batch=batch, c_in=d_branch, c_out=4 * d_branch,
+                width=pooled_seq, height=1, kernel=1)
+    g = OpSpec(batch=batch, c_in=d_model, c_out=d_model,
+               width=pooled_seq * 16, height=1, kernel=1)
+    return [DuBlockSpec(f1=f1, f2=f2, g=g) for _ in range(n_blocks)]

@@ -1,0 +1,136 @@
+"""Reversible block stacks with O(1) activation storage (CAMEL §II-C, §III).
+
+A reversible block (RevNet, Gomez et al.) computes
+
+    y2 = x2 + F1(x1)        y1 = x1 + F2(y2)            (eq 1)
+
+and its inputs are recoverable from its outputs:
+
+    x1 = y1 − F2(y2)        x2 = y2 − F1(x1)            (eq 2)
+
+``ReversibleStack`` runs L such blocks under ``lax.scan`` and registers a
+``jax.custom_vjp`` whose backward pass *recomputes* every block input from the
+stack outputs while walking the stack in reverse — so the compiled training
+step stores only the final ``(y1, y2)`` pair (plus the tiny pooled duplex
+taps), not L intermediate activations.  This is the paper's data-lifetime /
+memory mechanism, and on TPU it is what shrinks the XLA buffer assignment
+(``compiled.memory_analysis()``) from O(L) to O(1) residuals.
+
+The backward walk is also the *schedule* of Fig 15: the recompute of
+``x1/x2`` (eq 2), the block VJP, and the gradient carries correspond to
+``U₂ᵃ/U₁ᵃ/U₂ʷ/U₁ʷ`` with dead intermediates overwritten as the scan carry.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# F1/F2 signature: (params, x) -> y with y.shape == x.shape.
+ApplyFn = Callable[[Any, jax.Array], jax.Array]
+
+
+class ReversibleStack:
+    """A scan-of-reversible-blocks with memory-O(1) custom backward.
+
+    Parameters are a pytree whose leaves are stacked on a leading ``L`` axis
+    (one slice per block), holding sub-trees ``f1`` and ``f2``.  An optional
+    injection stream ``inj`` (leading axis ``L``, broadcastable to ``x2``)
+    is added to ``x2`` before each block — this carries the pooled backbone
+    taps of the Duplex architecture (§III-B); its gradient is returned so the
+    tap projections train too.
+    """
+
+    def __init__(self, f1: ApplyFn, f2: ApplyFn):
+        self.f1 = f1
+        self.f2 = f2
+
+        @jax.custom_vjp
+        def _apply(params, x1, x2, inj):
+            (y1, y2), _ = lax.scan(self._fwd_body, (x1, x2), (params, inj))
+            return y1, y2
+
+        def _apply_fwd(params, x1, x2, inj):
+            out = _apply(params, x1, x2, inj)
+            # Residuals: ONLY the stack outputs + params/taps. No per-block
+            # activations are saved — they are recomputed in _apply_bwd.
+            return out, (params, inj, out[0], out[1])
+
+        def _apply_bwd(res, g):
+            params, inj, y1, y2 = res
+            g1, g2 = g
+
+            def body(carry, xs):
+                y1, y2, g1, g2 = carry
+                p, z = xs
+                # eq 2 — recompute the block inputs from its outputs.
+                x1 = y1 - self.f2(p["f2"], y2)
+                x2_mid = y2 - self.f1(p["f1"], x1)  # == x2 + z
+                x2 = x2_mid - z
+
+                def block(p_, x1_, x2_, z_):
+                    x2m = x2_ + z_
+                    y2_ = x2m + self.f1(p_["f1"], x1_)
+                    y1_ = x1_ + self.f2(p_["f2"], y2_)
+                    return y1_, y2_
+
+                _, vjp = jax.vjp(block, p, x1, x2, z)
+                gp, gx1, gx2, gz = vjp((g1, g2))
+                return (x1, x2, gx1, gx2), (gp, gz)
+
+            (_, _, gx1, gx2), (gparams, ginj) = lax.scan(
+                body, (y1, y2, g1, g2), (params, inj), reverse=True)
+            return gparams, gx1, gx2, ginj
+
+        _apply.defvjp(_apply_fwd, _apply_bwd)
+        self._apply = _apply
+
+    def _fwd_body(self, carry, xs):
+        x1, x2 = carry
+        p, z = xs
+        x2 = x2 + z                      # duplex tap injection
+        y2 = x2 + self.f1(p["f1"], x1)   # eq 1
+        y1 = x1 + self.f2(p["f2"], y2)
+        return (y1, y2), None
+
+    def __call__(self, params, x1: jax.Array, x2: jax.Array,
+                 inj: Optional[jax.Array] = None):
+        if inj is None:
+            n_blocks = jax.tree_util.tree_leaves(params)[0].shape[0]
+            inj = jnp.zeros((n_blocks,) + (1,) * x2.ndim, x2.dtype)
+        return self._apply(params, x1, x2, inj)
+
+    def forward_only(self, params, x1, x2, inj=None):
+        """Inference path (no vjp registration overhead)."""
+        if inj is None:
+            n_blocks = jax.tree_util.tree_leaves(params)[0].shape[0]
+            inj = jnp.zeros((n_blocks,) + (1,) * x2.ndim, x2.dtype)
+        (y1, y2), _ = lax.scan(self._fwd_body, (x1, x2), (params, inj))
+        return y1, y2
+
+    def invert(self, params, y1, y2, inj=None):
+        """Recover stack inputs from outputs (eq 2) — used by tests and by
+        the lifetime analyzer to emit the backward schedule."""
+        if inj is None:
+            n_blocks = jax.tree_util.tree_leaves(params)[0].shape[0]
+            inj = jnp.zeros((n_blocks,) + (1,) * y2.ndim, y2.dtype)
+
+        def body(carry, xs):
+            y1, y2 = carry
+            p, z = xs
+            x1 = y1 - self.f2(p["f2"], y2)
+            x2 = y2 - self.f1(p["f1"], x1) - z
+            return (x1, x2), None
+
+        (x1, x2), _ = lax.scan(body, (y1, y2), (params, inj), reverse=True)
+        return x1, x2
+
+
+def stack_params(init_fn: Callable[[jax.Array], Any], key: jax.Array,
+                 n_blocks: int) -> Any:
+    """Initialize L block param trees stacked on a leading axis (scan layout)."""
+    keys = jax.random.split(key, n_blocks)
+    return jax.vmap(init_fn)(keys)

@@ -1,0 +1,173 @@
+"""Computation-pattern scheduler + discrete-event memory simulator
+(CAMEL §IV, Figs 12–15).
+
+Builds the dependency graph of one DuDNN training iteration, executes the
+paper's pseudo-instruction order with the overwrite policy ("any value not
+read again is dead"), and reports per-tensor lifetimes, peak live memory,
+and read/write bit traffic.  Cross-validates the closed forms in
+``core.lifetime`` (tests assert agreement within one op duration) and feeds
+``core.hwmodel``'s energy accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import networkx as nx
+
+from repro.core.lifetime import DuBlockSpec, OpSpec, latency
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    name: str
+    duration: float
+    reads: tuple
+    writes: tuple
+
+
+@dataclasses.dataclass
+class SimResult:
+    lifetimes: dict            # tensor -> seconds between write & last read
+    peak_live_bits: float
+    read_bits: float
+    write_bits: float
+    total_time: float
+    schedule: list
+
+    @property
+    def max_lifetime(self) -> float:
+        return max(self.lifetimes.values()) if self.lifetimes else 0.0
+
+
+def _tensor_bits(spec: OpSpec, bits_per_value: float) -> float:
+    return spec.batch * spec.c_out * spec.width * spec.height * bits_per_value
+
+
+def forward_ops(blocks: Sequence[DuBlockSpec], R: float) -> list[Op]:
+    """Fig 12(c)/(d): per layer — G, F1, add(y2), F2, add(y1)."""
+    ops = []
+    for l, b in enumerate(blocks):
+        tg, t1, t2 = latency(b.g.macs, R), latency(b.f1.macs, R), \
+            latency(b.f2.macs, R)
+        ops += [
+            Op(f"G{l}", tg, (f"k{l}",), (f"k{l+1}",)),
+            Op(f"F1_{l}", t1, (f"b1_{l}", f"k{l+1}"), (f"t{l}",)),
+            Op(f"ADD2_{l}", 0.0, (f"b2_{l}", f"t{l}"), (f"b2_{l+1}",)),
+            Op(f"F2_{l}", t2, (f"b2_{l+1}",), (f"s{l}",)),
+            Op(f"ADD1_{l}", 0.0, (f"b1_{l}", f"s{l}"), (f"b1_{l+1}",)),
+        ]
+    return ops
+
+
+def backward_ops(blocks: Sequence[DuBlockSpec], R: float) -> list[Op]:
+    """Fig 14(c)/15(a): reversed walk with recompute + gradient ops."""
+    ops = []
+    L = len(blocks)
+    for l in reversed(range(L)):
+        b = blocks[l]
+        t1, t2 = latency(b.f1.macs_out, R), latency(b.f2.macs_out, R)
+        ops += [
+            # eq 2 input recompute
+            Op(f"RF2_{l}", t2, (f"b2_{l+1}",), (f"rs{l}",)),
+            Op(f"SUBX1_{l}", 0.0, (f"b1_{l+1}", f"rs{l}"), (f"b1_{l}",)),
+            Op(f"RF1_{l}", t1, (f"b1_{l}",), (f"rt{l}",)),
+            Op(f"SUBX2_{l}", 0.0, (f"b2_{l+1}", f"rt{l}"), (f"b2_{l}",)),
+            # input gradients: m = g2 + U2a(g1); s = g1 + U1a(m)
+            Op(f"U2A_{l}", t2, (f"g1_{l+1}",), (f"u2a{l}",)),
+            Op(f"ADDM_{l}", 0.0, (f"g2_{l+1}", f"u2a{l}"), (f"m{l}",)),
+            # weight gradients
+            Op(f"U2W_{l}", t2, (f"g1_{l+1}", f"b2_{l+1}"), (f"q2_{l}",)),
+            Op(f"U1A_{l}", t1, (f"m{l}",), (f"u1a{l}",)),
+            Op(f"ADDS_{l}", 0.0, (f"g1_{l+1}", f"u1a{l}"), (f"g1_{l}",)),
+            Op(f"U1W_{l}", t1, (f"m{l}", f"b1_{l}"), (f"q1_{l}",)),
+            Op(f"COPYG2_{l}", 0.0, (f"m{l}",), (f"g2_{l}",)),
+        ]
+    return ops
+
+
+def dependency_graph(ops: Sequence[Op]) -> nx.DiGraph:
+    """Producer→consumer DAG (Fig 12b / 14b)."""
+    g = nx.DiGraph()
+    last_writer: dict = {}
+    for op in ops:
+        g.add_node(op.name, duration=op.duration)
+        for t in op.reads:
+            if t in last_writer:
+                g.add_edge(last_writer[t], op.name, tensor=t)
+        for t in op.writes:
+            last_writer[t] = op.name
+    if not nx.is_directed_acyclic_graph(g):
+        raise ValueError("computation pattern has a cycle")
+    return g
+
+
+def _sizes(blocks: Sequence[DuBlockSpec], bits: float) -> dict:
+    sizes: dict = {}
+    for l, b in enumerate(blocks):
+        br = _tensor_bits(b.f1, bits)
+        bk = _tensor_bits(b.g, bits)
+        for name in (f"b1_{l}", f"b2_{l}", f"b1_{l+1}", f"b2_{l+1}",
+                     f"t{l}", f"s{l}", f"rs{l}", f"rt{l}", f"u2a{l}",
+                     f"u1a{l}", f"m{l}", f"g1_{l}", f"g2_{l}",
+                     f"g1_{l+1}", f"g2_{l+1}", f"q1_{l}", f"q2_{l}"):
+            sizes[name] = br
+        sizes[f"k{l}"] = bk
+        sizes[f"k{l+1}"] = bk
+    return sizes
+
+
+def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
+             bits_per_value: float = 58 / 9,
+             live_at_start: Sequence[str] = ()) -> SimResult:
+    """Execute ``ops`` in order with the overwrite policy; measure lifetimes.
+
+    A tensor becomes live at its producing op's end and dies after its last
+    reader finishes (it is overwritten — Fig 12c's "x2 can be overwritten
+    once y3 is produced").
+    """
+    sizes = _sizes(blocks, bits_per_value)
+    last_read_op: dict = {}
+    for op in ops:
+        for t in op.reads:
+            last_read_op[t] = op.name
+
+    t_now = 0.0
+    write_time: dict = {}
+    lifetimes: dict = {}
+    live: dict = {t: 0.0 for t in live_at_start}
+    peak = sum(sizes.get(t, 0.0) for t in live)
+    read_bits = write_bits = 0.0
+    schedule = []
+    for op in ops:
+        start, end = t_now, t_now + op.duration
+        t_now = end
+        schedule.append((op.name, start, end))
+        for t in op.reads:
+            read_bits += sizes.get(t, 0.0)
+        for t in op.writes:
+            write_bits += sizes.get(t, 0.0)
+            write_time[t] = end
+            live[t] = sizes.get(t, 0.0)
+        peak = max(peak, sum(live.values()))
+        # overwrite policy: free every tensor whose last reader just ran
+        for t in op.reads:
+            if last_read_op.get(t) == op.name:
+                if t in write_time:
+                    lifetimes[t] = end - write_time.pop(t)
+                live.pop(t, None)
+    return SimResult(lifetimes=lifetimes, peak_live_bits=peak,
+                     read_bits=read_bits, write_bits=write_bits,
+                     total_time=t_now, schedule=schedule)
+
+
+def simulate_training_iteration(blocks: Sequence[DuBlockSpec], R: float,
+                                bits_per_value: float = 58 / 9):
+    """Forward + backward of one iteration; returns (fwd, bwd) SimResults."""
+    L = len(blocks)
+    fwd = simulate(forward_ops(blocks, R), blocks, bits_per_value,
+                   live_at_start=("b1_0", "b2_0", "k0"))
+    bwd = simulate(backward_ops(blocks, R), blocks, bits_per_value,
+                   live_at_start=(f"b1_{L}", f"b2_{L}",
+                                  f"g1_{L}", f"g2_{L}"))
+    return fwd, bwd

@@ -1,0 +1,36 @@
+"""Activation-sharding context: models call ``constrain(x, name)`` at
+strategic tensors; a launcher installs per-arch PartitionSpec rules.  When no
+rules are installed (CPU unit tests) the calls are no-ops, so model code
+stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_RULES: Optional[dict] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    """rules: {name: PartitionSpec} — installed for the duration."""
+    global _MESH, _RULES
+    prev = (_MESH, _RULES)
+    _MESH, _RULES = mesh, rules
+    try:
+        yield
+    finally:
+        _MESH, _RULES = prev
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    if _RULES is None or name not in _RULES:
+        return x
+    spec = _RULES[name]
+    if len(spec) > x.ndim:          # rank-adjust (e.g. decode S=1 collapsed)
+        spec = P(*spec[:x.ndim])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

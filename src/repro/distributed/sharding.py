@@ -1,0 +1,220 @@
+"""Sharding rules: param/optimizer/cache/batch pytrees → PartitionSpecs.
+
+Scheme (DESIGN.md §6):
+* ``model`` axis — tensor parallel (attention heads / MLP hidden / experts /
+  vocab) + sequence-sharded KV caches for serving;
+* ``data`` axis — batch DP + FSDP weight sharding (ZeRO-3-style: the
+  non-TP dim of every large weight is sharded over ``data`` and gathered at
+  use);
+* ``pod`` axis — pure DP across pods: weights replicated, only gradients
+  cross the inter-pod links (under the duplex regime those are just the tiny
+  branch gradients — the paper's structure paying off at pod scale).
+
+Every rule is divisibility-guarded: if a dim doesn't divide its mesh axis,
+that dim falls back to replication (e.g. 36 or 40 attention heads on TP=16
+⇒ the head axis replicates and attention runs sequence-parallel instead).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import path_str
+
+# (pattern, spec template applied to the *logical* (unstacked) shape)
+# first match wins; "data"/"model" are mesh axes, None replicates.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$", ("model", "data")),
+    (r"attn/w[qkv]/w$", ("data", "model")),
+    (r"attn/w[qkv]/b$", ("model",)),
+    (r"attn/wo/w$", ("model", "data")),
+    (r"moe/router/w$", (None, None)),
+    (r"moe/w[ig]$", ("model", "data", None)),
+    (r"moe/wo$", ("model", None, "data")),
+    (r"(mlp|shared)/w[ig]/w$", ("data", "model")),
+    (r"(mlp|shared)/wo/w$", ("model", "data")),
+    (r"ssd/(z|x|dt)_proj/w$", ("data", "model")),
+    (r"ssd/(b|c)_proj/w$", ("data", None)),
+    (r"ssd/out_proj/w$", ("model", "data")),
+    (r"ssd/conv_x/w$", (None, "model")),
+    (r"ssd/conv_x/b$", ("model",)),
+    (r"ssd/conv_[bc]/", (None,)),          # tiny B/C convs: replicate
+    (r"ssd/(dt_bias|A_log|D)$", ("model",)),
+    (r"ssd/norm/scale$", ("model",)),      # rmsnorm over sharded d_inner
+    (r"lru/w[xy]/w$", ("data", "model")),
+    (r"lru/wo/w$", ("model", "data")),
+    (r"lru/w[ri]/w$", ("model", None)),
+    (r"lru/w[ri]/b$", (None,)),
+    (r"lru/conv_w$", (None, "model")),
+    (r"lru/(conv_b|lambda)$", ("model",)),
+    # duplex branch projections follow the generic dense rules below
+    (r"(in_proj[12]|out_proj|tap_proj)/w$", ("data", "model")),
+    # norms / everything else: replicated
+    (r".*", ()),
+]
+
+_STACKED_PREFIXES = ("stack/", "blocks/", "tap_proj/")
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    return 1 if axis is None else mesh.shape[axis]
+
+
+def _guard(spec: tuple, shape: tuple, mesh: Mesh) -> tuple:
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is not None and shape[i] % _mesh_axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return tuple(out)
+
+
+def _is_stacked(path: str) -> bool:
+    return any(s in path for s in _STACKED_PREFIXES)
+
+
+def param_pspec(path: str, shape: tuple, mesh: Mesh, *,
+                fsdp_pure: bool = False,
+                lru_gates_colparallel: bool = False) -> P:
+    """Param rules with two §Perf variants:
+
+    * ``fsdp_pure`` — shard dim-0 of every large weight over the *combined*
+      (data, model) axes and replicate nothing else (ZeRO-3).  For the
+      frozen duplex backbone this removes every per-layer TP psum of the
+      residual stream; weights are all-gathered once per layer, forward
+      only (no backward re-gather — the backbone has no gradients).
+    * ``lru_gates_colparallel`` — RG-LRU gates W_r/W_i switch from
+      row-parallel (full-width psum of [B,S,W] per gate per layer) to
+      column-parallel (one [B,S,W] all-gather of the shared input).
+    """
+    lead = 1 if (_is_stacked(path) and len(shape) >= 1) else 0
+    logical = shape[lead:]
+    if fsdp_pure and len(logical) >= 2:
+        combined = tuple(a for a in ("data", "model")
+                         if a in mesh.axis_names)
+        n = 1
+        for a in combined:
+            n *= mesh.shape[a]
+        spec = [None] * len(logical)
+        placed = False
+        for d in range(len(logical)):          # prefer a fully-sharded dim
+            if logical[d] % n == 0:
+                spec[d] = combined
+                placed = True
+                break
+        if not placed:
+            # split the axes across two dims (e.g. 29568×8192 on 16×16)
+            ax0, ax1 = combined if len(combined) == 2 else (combined[0],) * 2
+            if logical[0] % mesh.shape[ax0] == 0 and \
+                    logical[1] % mesh.shape[ax1] == 0:
+                spec[0], spec[1] = ax0, ax1
+            elif logical[0] % mesh.shape[ax0] == 0:
+                spec[0] = ax0
+            elif logical[1] % mesh.shape[ax1] == 0:
+                spec[1] = ax1
+        return P(*((None,) * lead + tuple(spec)))
+    rules = _PARAM_RULES
+    if lru_gates_colparallel:
+        rules = [(r"lru/w[ri]/w$", (None, "model")),
+                 (r"lru/w[ri]/b$", ("model",))] + rules
+    for pat, spec in rules:
+        if re.search(pat, path):
+            spec = spec[:len(logical)]
+            spec = spec + (None,) * (len(logical) - len(spec))
+            spec = _guard(spec, logical, mesh)
+            return P(*((None,) * lead + spec))
+    return P()
+
+
+def dp_axes(mesh: Mesh, include_model: bool = False):
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = tuple(a for a in mesh.axis_names if a in names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _guard_dp(batch_dim: int, mesh: Mesh,
+              include_model: bool = False) -> Optional[Any]:
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    total = 1
+    for a in names:
+        if a in mesh.axis_names:
+            total *= mesh.shape[a]
+    return dp_axes(mesh, include_model) if batch_dim % total == 0 else None
+
+
+def cache_pspec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """KV caches / recurrent states: batch over DP, seq-or-state over model."""
+    lead = 1 if path.startswith("stack/") else 0
+    logical = shape[lead:]
+    name = path.rsplit("/", 1)[-1]
+    if name in ("len", "step") or not logical:
+        return P()
+    if name == "pos":
+        return P(*((None,) * len(shape)))
+    dp = _guard_dp(logical[0], mesh)
+    spec: tuple
+    if name in ("k", "v"):
+        # [B, S, KV, hd] — sequence-sharded cache (context parallelism)
+        spec = (dp, "model", None, None)
+    elif name == "h" and len(logical) == 4:       # ssd [B,H,P,N]
+        spec = (dp, "model", None, None)
+    elif name == "h" and len(logical) == 2:       # lru [B,W]
+        spec = (dp, "model")
+    elif name.startswith("conv"):                 # [B,K-1,C]
+        spec = (dp, None, "model")
+    else:
+        spec = (dp,) + (None,) * (len(logical) - 1)
+    spec = spec[:len(logical)] + (None,) * (len(logical) - len(spec))
+    guarded = []
+    for i, s in enumerate(spec):
+        if s is None or s == dp or isinstance(s, tuple):
+            guarded.append(s)          # dp already divisibility-guarded
+        else:
+            guarded.append(s if logical[i] % mesh.shape[s] == 0 else None)
+    return P(*((None,) * lead + tuple(guarded)))
+
+
+def batch_pspec(shape: tuple, mesh: Mesh,
+                include_model: bool = False) -> P:
+    """``include_model=True``: batch over ALL axes (the fsdp_pure layout)."""
+    dp = _guard_dp(shape[0], mesh, include_model)
+    if include_model and dp is None:
+        dp = _guard_dp(shape[0], mesh)      # fall back to pod×data
+    return P(*((dp,) + (None,) * (len(shape) - 1)))
+
+
+# --------------------------------------------------------------------------
+# tree-level helpers
+# --------------------------------------------------------------------------
+
+def tree_pspecs(tree: Any, mesh: Mesh, rule) -> Any:
+    """Map a pytree of arrays/ShapeDtypeStructs to PartitionSpecs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: rule(_strip(path_str(p)), x.shape, mesh), tree)
+
+
+def _strip(path: str) -> str:
+    # optimizer state wraps the param tree under mu/nu; strip for matching
+    for pre in ("mu/", "nu/", "backbone/", "branch/", "opt/"):
+        if path.startswith(pre):
+            return _strip(path[len(pre):])
+    return path
+
+
+def state_pspecs(state_shapes: Any, mesh: Mesh, pspec=None) -> Any:
+    pspec = pspec or param_pspec
+    def rule(path, shape, m):
+        if path in ("step",) or path.endswith("/step") or not shape:
+            return P()
+        return pspec(path, shape, m)
+    return tree_pspecs(state_shapes, mesh, rule)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

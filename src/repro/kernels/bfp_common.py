@@ -1,0 +1,68 @@
+"""Shared in-kernel helpers for the BFP Pallas kernels.
+
+Everything here must lower on Mosaic/TPU: exponent extraction uses an integer
+bitcast (`floor(log2|x|)` = biased exponent − 127 for normalized floats)
+instead of `frexp`, which the TPU backend does not provide.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32_EXP_BIAS = 127
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2(x)) for x >= 0 (f32), elementwise; x == 0 → -127."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    e = jnp.right_shift(bits, 23) & 0xFF
+    e = e - F32_EXP_BIAS
+    return jnp.where(x > 0, e, jnp.full_like(e, -F32_EXP_BIAS))
+
+
+def group_exponent(x: jax.Array, g: int, ebits: int) -> jax.Array:
+    """Shared exponent per (g×g) group of a 2D block; shape (M/g, 1, N/g, 1)."""
+    bm, bn = x.shape
+    xg = x.reshape(bm // g, g, bn // g, g)
+    amax = jnp.max(jnp.abs(xg), axis=(1, 3), keepdims=True)
+    e = floor_log2(amax)
+    lo, hi = -(2 ** (ebits - 1)), 2 ** (ebits - 1) - 1
+    return jnp.clip(e, lo, hi)
+
+
+def qdq_block(x: jax.Array, g: int, mbits: int, ebits: int) -> jax.Array:
+    """Quantize→dequantize a 2D f32 block with square (g×g) BFP groups.
+
+    This is the PE-boundary quantization of the CAMEL systolic array mapped to
+    a VMEM-resident tile: operands are quantized as they enter the MXU, so no
+    quantized copy ever round-trips HBM.
+    """
+    bm, bn = x.shape
+    x = x.astype(jnp.float32)
+    e = group_exponent(x, g, ebits)
+    xg = x.reshape(bm // g, g, bn // g, g)
+    scale = jnp.exp2((e - (mbits - 1)).astype(jnp.float32))
+    lim = float(2**mbits - 1)
+    m = jnp.clip(jnp.round(xg / scale), -lim, lim)
+    return (m * scale).reshape(bm, bn)
+
+
+def quant_block(x: jax.Array, g: int, mbits: int, ebits: int):
+    """Quantize a 2D block → (mant int8 [bm,bn], exp int8 [bm/g,bn/g])."""
+    bm, bn = x.shape
+    x = x.astype(jnp.float32)
+    e = group_exponent(x, g, ebits)
+    xg = x.reshape(bm // g, g, bn // g, g)
+    scale = jnp.exp2((e - (mbits - 1)).astype(jnp.float32))
+    lim = float(2**mbits - 1)
+    m = jnp.clip(jnp.round(xg / scale), -lim, lim)
+    mant = m.reshape(bm, bn).astype(jnp.int8)
+    exp = e.reshape(bm // g, bn // g).astype(jnp.int8)
+    return mant, exp
+
+
+def dequant_block(mant: jax.Array, exp: jax.Array, g: int, mbits: int) -> jax.Array:
+    bm, bn = mant.shape
+    mg = mant.reshape(bm // g, g, bn // g, g).astype(jnp.float32)
+    e = exp.astype(jnp.float32)[:, None, :, None]
+    return (mg * jnp.exp2(e - (mbits - 1))).reshape(bm, bn)

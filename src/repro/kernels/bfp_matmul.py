@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused 2D-BFP matmul (CAMEL's BFP PE array on the MXU).
+
+Computes ``Q(A) @ Q(B)`` where ``Q`` is square-group 2D BFP quantization
+(§III-E).  Operands are quantized *inside* the kernel at the VMEM tile
+boundary — the TPU analogue of CAMEL's PE-edge BFP conversion — so only
+full-precision tiles stream HBM→VMEM and no quantized copy is materialized.
+
+Dataflow (DESIGN.md §2): the K-innermost grid with a VMEM f32 accumulator is
+the accumulation-stationary schedule of Fig 17(c); the A-block is re-used
+across the N-loop like a stationary weight in Fig 17(a).
+
+Grid:  (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics → sequential).
+BlockSpecs: A (bm,bk) @ (i,k) · B (bk,bn) @ (k,j) → O (bm,bn) @ (i,j).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bfp_common import qdq_block
+
+
+def _bfp_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, g, mbits, ebits,
+                       skip_zero_groups):
+    """One (i, j, k) grid step: acc += Q(A[i,k]) @ Q(B[k,j])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = qdq_block(a_ref[...], g, mbits, ebits)
+    b = qdq_block(b_ref[...], g, mbits, ebits)
+
+    if skip_zero_groups:
+        # CAMEL's first gating checkpoint (§V-B): skip the MAC entirely when
+        # one operand tile is all-zero.  On the MXU this is a tile-level (not
+        # per-element) skip — the closest structural analogue.
+        nonzero = jnp.logical_and(jnp.any(a != 0.0), jnp.any(b != 0.0))
+
+        @pl.when(nonzero)
+        def _mac():
+            acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "mbits", "ebits", "block_m", "block_n",
+                     "block_k", "skip_zero_groups", "interpret", "out_dtype"),
+)
+def bfp_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    group: int = 32,
+    mbits: int = 5,
+    ebits: int = 4,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    skip_zero_groups: bool = False,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """``Q(a) @ Q(b)`` with square-group 2D BFP operands.
+
+    ``a``: (M, K), ``b``: (K, N).  Dims are padded to block multiples; blocks
+    are multiples of ``group`` so in-block groups coincide with the global
+    group grid (zero padding never raises a group max).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"expected 2D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    for blk in (block_m, block_n, block_k):
+        if blk % group:
+            raise ValueError(f"block size {blk} not a multiple of group {group}")
+
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, _ceil(m, group)), min(block_n, _ceil(n, group)),
+                  min(block_k, _ceil(k, group)))
+    mp, kp, np_ = _ceil(m, bm), _ceil(k, bk), _ceil(n, bn)
+    a = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_bfp_matmul_kernel, g=group, mbits=mbits, ebits=ebits,
+                          skip_zero_groups=skip_zero_groups),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def _ceil(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+
+
+def ref_bfp_matmul(a, b, *, group=32, mbits=5, ebits=4):
+    """Oracle for kernels.bfp_matmul: global square-group qdq then f32 matmul.
+
+    Valid as an oracle because kernel blocks are multiples of the group and
+    blocks tile the operand from the (0,0) origin, so in-block groups coincide
+    with the global group grid and zero padding never changes a group max.
+    """
+    aq = bfp.bfp_dequantize(bfp.bfp_quantize(
+        a.astype(jnp.float32), group=(group, group), ebits=ebits, mbits=mbits))
+    bq = bfp.bfp_dequantize(bfp.bfp_quantize(
+        b.astype(jnp.float32), group=(group, group), ebits=ebits, mbits=mbits))
+    return jnp.matmul(aq, bq, precision=jax.lax.Precision.HIGHEST)
+
+
+def ref_bfp_quantize(x, *, group=32, mbits=5, ebits=4):
+    """Oracle for kernels.bfp_quantize_pallas (packed mant/exp layout)."""
+    t = bfp.bfp_quantize(x.astype(jnp.float32), group=(group, group),
+                         ebits=ebits, mbits=mbits)
+    return t.mant, t.exp
+
+
+def ref_bfp_matmul_packed(a_mant, a_exp, b_mant, b_exp, *, group=32, mbits=5):
+    """Oracle for kernels.bfp_matmul_packed."""
+    def deq(mant, exp):
+        m, n = mant.shape
+        t = bfp.BFPTensor(mant=mant, exp=exp, shape=(m, n),
+                          group=(group, group), mbits=mbits)
+        return bfp.bfp_dequantize(t)
+    return jnp.matmul(deq(a_mant, a_exp), deq(b_mant, b_exp),
+                      precision=jax.lax.Precision.HIGHEST)

@@ -1,0 +1,95 @@
+"""Production training launcher.
+
+On a real TPU slice this process runs once per host (``jax.distributed``
+initializes from the cluster env); the same entry point runs on CPU for
+local smoke runs with ``--preset smoke``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b \
+        --preset smoke --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointConfig
+from repro.data.pipeline import DataConfig
+from repro.distributed import ctx, sharding as sh
+from repro.launch.cells import activation_rules, duplex_tcfg
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import layers as L, registry
+from repro.train import loop, train_step as ts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(registry.ARCHS))
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--mode", default="duplex", choices=["duplex", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize jax.distributed from cluster env")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    entry = registry.get(args.arch)
+    cfg = entry.config(args.preset)
+    policy = L.Policy(compute_dtype=(jnp.bfloat16 if args.preset == "full"
+                                     else jnp.float32))
+    tcfg = duplex_tcfg(cfg) if args.mode == "duplex" else \
+        ts.TrainConfig(mode="full")
+    if args.preset == "smoke":
+        import dataclasses as dc
+        from repro.core import duplex as dx
+        tcfg = dc.replace(
+            tcfg, backbone_dtype=jnp.float32,
+            duplex=dx.DuplexConfig(n_blocks=2, d_branch=32, pool_factor=4,
+                                   branch_heads=2,
+                                   bfp=L.BFPPolicy(enabled=True,
+                                                   group=(3, 3))))
+
+    mesh = make_host_mesh() if args.mesh == "host" else \
+        make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    with mesh, ctx.activation_sharding(mesh, activation_rules(cfg, mesh)):
+        state_specs = sh.to_named(
+            sh.state_pspecs(
+                jax.eval_shape(lambda k: ts.init_state(k, entry, cfg, tcfg,
+                                                       policy),
+                               jax.random.PRNGKey(0)), mesh), mesh)
+        step = jax.jit(ts.make_train_step(entry, cfg, tcfg, policy),
+                       donate_argnums=0)
+
+        def init_fn():
+            st = ts.init_state(jax.random.PRNGKey(0), entry, cfg, tcfg,
+                               policy)
+            return jax.device_put(st, state_specs)
+
+        def step_fn(state, batch):
+            return step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+
+        report = loop.run(
+            loop.LoopConfig(
+                total_steps=args.steps, ckpt_every=args.ckpt_every,
+                ckpt=(CheckpointConfig(args.ckpt_dir)
+                      if args.ckpt_dir else None),
+                log_every=10, step_deadline_s=60.0),
+            DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                       batch_per_host=args.batch,
+                       seed=jax.process_index()),
+            step_fn, init_fn)
+    print(f"finished {report.steps_run} steps in {report.wall_s:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Encoder-decoder composition (whisper family).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, n_frames, d_model].  The encoder
+is a bidirectional stack; the decoder is a causal stack whose pattern
+interleaves self-attention and cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ModelConfig
+from repro.models import layers as L, transformer as T
+from repro.utils import split_keys
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    assert cfg.encoder is not None, "enc-dec config needs cfg.encoder"
+    ks = split_keys(key, ["enc", "dec"])
+    return {
+        "encoder": T.init_params(ks["enc"], cfg.encoder),
+        "decoder": T.init_params(ks["dec"], cfg),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, *,
+           policy: L.Policy = L.Policy()) -> jax.Array:
+    """frames: [B, n_frames, d_model] stub frontend embeddings → enc hidden."""
+    ecfg = cfg.encoder
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = frames.astype(policy.compute_dtype)
+    if ecfg.pos_embed == "sinusoidal":
+        h = h + T.sinusoidal_embed(pos, ecfg.d_model).astype(h.dtype)
+    out = T.forward(params["encoder"], ecfg, tokens=jnp.zeros((b, s), jnp.int32),
+                    policy=policy, inputs_embeds=h)
+    return out["hidden"]
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            frontend: dict, policy: L.Policy = L.Policy(),
+            bfp: L.BFPPolicy = L.NO_BFP, collect_taps: bool = False,
+            tap_indices=None, tap_pool: int = 1) -> dict:
+    enc_out = encode(params, cfg, frontend["frames"], policy=policy)
+    return T.forward(params["decoder"], cfg, tokens,
+                     frontend={"cross_kv": enc_out}, policy=policy, bfp=bfp,
+                     collect_taps=collect_taps, tap_indices=tap_indices,
+                     tap_pool=tap_pool)
+
+
+def lm_logits(params, cfg: ModelConfig, hidden, policy=L.Policy()):
+    return T.lm_logits(params["decoder"], cfg, hidden, policy)
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, *, frontend: dict,
+            max_len: int, policy: L.Policy = L.Policy(),
+            cache_dtype=jnp.bfloat16, logits_mode: str = "all") -> dict:
+    enc_out = encode(params, cfg, frontend["frames"], policy=policy)
+    return T.prefill(params["decoder"], cfg, tokens,
+                     frontend={"cross_kv": enc_out}, max_len=max_len,
+                     policy=policy, cache_dtype=cache_dtype,
+                     logits_mode=logits_mode)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    return T.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict, *,
+                policy: L.Policy = L.Policy()):
+    return T.decode_step(params["decoder"], cfg, tokens, cache, policy=policy)

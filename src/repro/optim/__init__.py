@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (AdamWConfig, OptConfig, SGDConfig,
+                                    global_norm, opt_init, opt_update)
+from repro.optim.schedule import (constant, cosine_warmup, step_decay)
+
+__all__ = ["AdamWConfig", "OptConfig", "SGDConfig", "global_norm",
+           "opt_init", "opt_update", "constant", "cosine_warmup",
+           "step_decay"]

@@ -1,0 +1,69 @@
+"""Gradient compression for the thin inter-pod links (DESIGN.md §6).
+
+int8 block-quantized all-reduce with error feedback: gradients are scaled
+per block, quantized to int8, summed in int32 (no overflow up to 2²³
+participants), and dequantized; the quantization residual is carried to the
+next step (error feedback keeps SGD/Adam convergence — Karimireddy et al.).
+
+Used inside ``shard_map`` over the gradient-reduction axes; ~4× less DP
+traffic than fp32 (2× vs bf16) where the network is thinnest.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import ceil_to
+
+
+def _quantize_int8(x: jax.Array, block: int = 2048):
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    npad = ceil_to(n, block)
+    flat = jnp.pad(flat, (0, npad - n)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, n: int, shape):
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name, block: int = 2048) -> jax.Array:
+    """int8-quantized psum-mean over ``axis_name``.
+
+    Each participant contributes q_i·scale_i; the sum is reconstructed with
+    the mean scale (exact when scales agree; the residual is absorbed by
+    error feedback at the caller).
+    """
+    q, scale, n = _quantize_int8(x, block)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)     # int32: no overflow
+    mean_scale = jax.lax.pmean(scale, axis_name)
+    nproc = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    summed = qsum.astype(jnp.float32) * mean_scale          # [blocks, block]
+    return summed.reshape(-1)[:n].reshape(x.shape) / nproc
+
+
+def compress_decompress(x: jax.Array, block: int = 2048) -> jax.Array:
+    """Local quantize→dequantize round trip (what each peer receives)."""
+    q, scale, n = _quantize_int8(x, block)
+    return _dequantize(q, scale, n, x.shape)
+
+
+def error_feedback_update(grads, residuals, block: int = 2048):
+    """Returns (compressed grads + carried residual, new residuals)."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        sent = compress_decompress(g, block)
+        return sent, g - sent
+
+    out = jax.tree_util.tree_map(one, grads, residuals)
+    sent = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree_util.tree_map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return sent, res

@@ -1,0 +1,88 @@
+"""Optimizers (pure pytree-functional; no optax in this environment).
+
+SGD+momentum is the paper's optimizer (§VI-B: momentum 0.9, weight decay
+5e-4); AdamW is provided for the LM examples.  All states are fp32 master
+copies — the mixed-precision policy keeps compute in bf16 while updates
+happen in fp32 (hybrid persistent/transient storage, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    nesterov: bool = False
+    clip_norm: float | None = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+
+OptConfig = Union[SGDConfig, AdamWConfig]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def opt_init(cfg: OptConfig, params):
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    if isinstance(cfg, SGDConfig):
+        return {"mu": zeros()}
+    return {"mu": zeros(), "nu": zeros()}
+
+
+def opt_update(cfg: OptConfig, grads, state, params, lr):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = _clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    if isinstance(cfg, SGDConfig):
+        mu = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g, state["mu"], grads)
+        upd = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g, mu, grads) if cfg.nesterov \
+            else mu
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p - lr * (u + cfg.weight_decay * p)).astype(p.dtype),
+            params, upd)
+        return new_params, {"mu": mu}, {"grad_norm": gnorm}
+
+    # AdamW (bias-corrected via step count carried in the state)
+    step = state.get("step", jnp.zeros((), jnp.int32)) + 1
+    mu = jax.tree_util.tree_map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["mu"], grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["nu"], grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: (p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                                   + cfg.weight_decay * p)).astype(p.dtype),
+        params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gnorm}

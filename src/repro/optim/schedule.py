@@ -1,0 +1,28 @@
+"""Learning-rate schedules (step functions: step int32 → lr f32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def step_decay(lr: float, boundaries: tuple[int, ...], factor: float = 0.1):
+    """The paper's schedule: divide by 10 at epochs 30/60 (§VI-B)."""
+    def fn(step):
+        mult = jnp.ones((), jnp.float32)
+        for b in boundaries:
+            mult = jnp.where(step >= b, mult * factor, mult)
+        return lr * mult
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, lr * cos)
+    return fn

@@ -1,0 +1,41 @@
+"""Losses: next-token cross-entropy with padded-vocab masking + z-loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_cross_entropy(logits: jax.Array, labels: jax.Array,
+                     mask: jax.Array | None = None,
+                     z_loss: float = 0.0):
+    """logits [B,S,Vp] (padded rows already −inf-masked), labels [B,S].
+
+    Returns (loss, metrics).  ``mask`` [B,S] ∈ {0,1} excludes padding tokens.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        loss = jnp.mean(nll)
+        denom = nll.size
+    else:
+        mask = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+    acc = (jnp.argmax(logits, -1) == labels)
+    if mask is not None:
+        acc = jnp.sum(acc * mask) / denom
+    else:
+        acc = jnp.mean(acc)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array):
+    """Classification loss (paper's Table II benchmarks). labels [B] int."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return jnp.mean(nll), {"loss": jnp.mean(nll), "accuracy": acc}

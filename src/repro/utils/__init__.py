@@ -1,0 +1,72 @@
+"""Small shared utilities: padding, tree paths, PRNG fan-out."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(x: jax.Array, axis: int, target: int, value: float = 0.0) -> jax.Array:
+    """Pad ``axis`` of ``x`` up to length ``target`` with ``value``."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    if cur > target:
+        raise ValueError(f"axis {axis} of shape {x.shape} exceeds target {target}")
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - cur)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int, value: float = 0.0) -> jax.Array:
+    return pad_axis(x, axis, ceil_to(x.shape[axis], multiple), value)
+
+
+def tree_paths(tree: Any) -> list[str]:
+    """Flattened '/'-joined key paths for a pytree of dicts/lists."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [path_str(p) for p, _ in flat]
+
+
+def path_str(path: tuple) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where ``fn`` receives the '/'-joined path string."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(path_str(p), x), tree)
+
+
+def split_keys(key: jax.Array, names: Iterable[str]) -> dict[str, jax.Array]:
+    names = list(names)
+    keys = jax.random.split(key, len(names))
+    return {n: k for n, k in zip(names, keys)}
+
+
+def count_params(tree: Any) -> int:
+    return sum(int(math.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") and jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

@@ -1,0 +1,128 @@
+"""Unit + property tests for 2D BFP quantization (CAMEL §III-E)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import bfp
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_roundtrip_exact_for_representable():
+    # Values that are exactly representable with a shared exponent survive.
+    # (max |x| = 8 ⇒ shared exp 3 ⇒ scale 2^-1; all entries are multiples of 0.5
+    # with magnitude ≤ 15.5, hence exactly representable in 5 mantissa bits.)
+    x = jnp.array([[1.0, 0.5, 3.5], [2.0, -1.5, 0.0], [4.0, 8.0, -8.0]])
+    t = bfp.bfp_quantize(x, group=(3, 3))
+    y = bfp.bfp_dequantize(t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=0, atol=0)
+
+
+def test_quantization_error_bound():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (48, 48))
+    y = bfp.bfp_dequantize(bfp.bfp_quantize(x, group=(3, 3)))
+    # max error within a group <= 1/2 ulp of the group scale = 2^(e-4)/2.
+    err = jnp.abs(x - y)
+    assert float(jnp.max(err)) < 0.25  # loose sanity bound for N(0,1) data
+    assert float(bfp.quantization_rmse(x)) < 0.05
+
+
+def test_transpose_invariance():
+    """The paper's key property: Q(Wᵀ) == Q(W)ᵀ (Fig 11)."""
+    key = jax.random.PRNGKey(1)
+    for group in [(3, 3), (2, 2), (8, 8), (32, 32)]:
+        w = jax.random.normal(key, (64, 96)) * 3.0
+        qt = bfp.bfp_quantize(w.T, group=group)
+        tq = bfp.bfp_quantize(w, group=group).transpose
+        np.testing.assert_array_equal(np.asarray(qt.mant), np.asarray(tq.mant))
+        np.testing.assert_array_equal(np.asarray(qt.exp), np.asarray(tq.exp))
+        np.testing.assert_allclose(
+            np.asarray(bfp.bfp_dequantize(qt)), np.asarray(bfp.bfp_dequantize(tq)))
+
+
+def test_nonsquare_group_transpose_breaks():
+    """1D/rectangular BFP does NOT commute with transpose — the motivation."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (12, 12))
+    qt = bfp.bfp_dequantize(bfp.bfp_quantize(w.T, group=(1, 4)))
+    tq = bfp.bfp_dequantize(bfp.bfp_quantize(w, group=(1, 4))).T
+    assert not np.allclose(np.asarray(qt), np.asarray(tq))
+
+
+def test_padding_and_batch_dims():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 5, 7))  # needs padding for (3,3)
+    t = bfp.bfp_quantize(x, group=(3, 3))
+    y = bfp.bfp_dequantize(t)
+    assert y.shape == x.shape
+    assert t.mant.shape == (2, 6, 9)
+    assert t.exp.shape == (2, 2, 3)
+
+
+def test_zero_group():
+    x = jnp.zeros((6, 6))
+    y = bfp.bfp_dequantize(bfp.bfp_quantize(x))
+    np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+
+def test_saturation_large_values():
+    x = jnp.full((3, 3), 1e9)
+    y = bfp.bfp_dequantize(bfp.bfp_quantize(x))
+    assert np.all(np.isfinite(np.asarray(y)))
+    # clipped to exponent 7: max representable = 31 * 2^(7-4) = 248
+    np.testing.assert_allclose(np.asarray(y), 248.0)
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.linspace(-2, 2, 36).reshape(6, 6)
+    g = jax.grad(lambda v: jnp.sum(bfp.bfp_qdq(v) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_bits_per_value_paper_format():
+    t = bfp.bfp_quantize(jnp.ones((9, 9)), group=(3, 3), mbits=5)
+    assert abs(t.bits_per_value - 58 / 9) < 1e-9  # 6.44 bits, paper §III-E
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 40),
+    n=st.integers(2, 40),
+    g=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_property_roundtrip_error(m, n, g, seed):
+    """Quantization error is bounded by half the group scale, elementwise."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (m, n))) * 4.0
+    t = bfp.bfp_quantize(jnp.asarray(x), group=(g, g))
+    y = np.asarray(bfp.bfp_dequantize(t))
+    # reconstruct per-element bound from stored exponents
+    exp = np.asarray(t.exp, dtype=np.float64)
+    scale_elem = np.kron(np.exp2(exp - (t.mbits - 1)), np.ones((g, g)))[:m, :n]
+    bound = scale_elem * 0.5 + 1e-12
+    # elements above 31.5·scale saturate the 5-bit mantissa (error up to 1·scale)
+    in_range = np.abs(x) <= 31.5 * scale_elem
+    assert np.all((np.abs(x - y) <= bound) | ~in_range)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([3, 6, 9, 12]),
+    k=st.sampled_from([3, 6, 9]),
+    n=st.sampled_from([3, 6, 9, 15]),
+    seed=st.integers(0, 2**16),
+)
+def test_property_matmul_close_to_f32(m, k, n, seed):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (m, k))
+    b = jax.random.normal(kb, (k, n))
+    exact = np.asarray(a @ b)
+    q = np.asarray(bfp.bfp_matmul_ref(a, b))
+    # ~5 mantissa bits ⇒ relative error per product ~3%; sum over k grows ~sqrt(k)
+    tol = 0.08 * np.sqrt(k) * np.maximum(1.0, np.abs(exact).max())
+    np.testing.assert_allclose(q, exact, atol=tol)

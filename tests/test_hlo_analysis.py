@@ -1,0 +1,91 @@
+"""HLO analyzer: trip-count weighting, collective accounting, dot FLOPs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.launch import hlo_analysis as ha
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_trip_weighted():
+    """cost_analysis counts while bodies once; our analyzer multiplies."""
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = lax.scan(body, x, None, length=10)
+        return y
+
+    txt = _hlo(f, w, x)
+    mod = ha.HloModule(txt)
+    expect = 2 * 8 * 256 * 256 * 10
+    assert abs(mod.dot_flops() - expect) / expect < 0.01
+
+
+def test_nested_scan_multipliers_compose():
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            c, _ = lax.scan(inner, c, None, length=5)
+            return c, None
+        y, _ = lax.scan(outer, x, None, length=3)
+        return y
+
+    mod = ha.HloModule(_hlo(f, w, x))
+    expect = 2 * 4 * 64 * 64 * 15         # 3 × 5 iterations
+    assert abs(mod.dot_flops() - expect) / expect < 0.01
+
+
+def test_conditional_weighted_half():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, i):
+            c = lax.cond(i < 5, lambda a: jnp.tanh(a @ a), lambda a: a, c)
+            return c, None
+        y, _ = lax.scan(body, x, jnp.arange(10))
+        return y
+
+    mod = ha.HloModule(_hlo(f, x))
+    full = 2 * 64 * 64 * 64 * 10
+    # both branches weighted 1/2 → expected ≈ half the always-execute count
+    assert mod.dot_flops() == pytest.approx(full / 2, rel=0.05)
+
+
+def test_collective_parsing_on_synthetic_hlo():
+    txt = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main.1 (p0: f32[16,32]) -> f32[16,32] {
+  %p0 = f32[16,32]{1,0} parameter(0)
+  %ar = f32[16,32]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[64,32]{1,0} all-gather(%p0), dimensions={0}
+  ROOT %out = f32[16,32]{1,0} copy(%ar)
+}
+"""
+    c = ha.collective_bytes(txt)
+    assert c["all-reduce"] == 16 * 32 * 4
+    assert c["all-gather"] == 64 * 32 * 4        # result size, not shard
+    assert c["total"] == (16 * 32 + 64 * 32) * 4
+
+
+def test_traffic_fusion_aware_excludes_elementwise():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(x):
+        return jnp.tanh(x) * 2 + 1      # pure elementwise: no dots
+
+    mod = ha.HloModule(_hlo(f, x))
+    assert mod.dot_flops() == 0
+    assert mod.traffic_bytes(fusion_aware=True) <= \
+        mod.traffic_bytes(fusion_aware=False)

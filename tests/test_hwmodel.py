@@ -1,0 +1,107 @@
+"""eDRAM model, lifetime closed forms vs schedule simulation, TTA/ETA."""
+import math
+
+import pytest
+
+from repro.core import edram as ed, hwmodel as hw, lifetime as lt, schedule as sc
+
+
+def test_retention_matches_fig22_endpoints():
+    assert abs(ed.retention_s(100.0) - 3.4e-6) / 3.4e-6 < 1e-6
+    assert abs(ed.retention_s(-30.0) - 30e-6) / 30e-6 < 1e-6
+    # monotone decreasing in temperature
+    assert ed.retention_s(0) > ed.retention_s(50) > ed.retention_s(100)
+
+
+def test_refresh_free_criterion():
+    assert ed.refresh_free(3.0e-6, 100.0)
+    assert not ed.refresh_free(4.0e-6, 100.0)
+    assert ed.refresh_margin(3.0e-6, 100.0) > 1.0
+
+
+def _blocks(n=6, batch=48, spatial=7, cb=64, ck=256):
+    return lt.duplex_block_specs(n, batch, spatial, cb, ck)
+
+
+def test_latencies_eqs_3_5():
+    b = _blocks()[0]
+    R = 1e12
+    assert lt.latency(b.f1.macs, R) == pytest.approx(
+        48 * 64 * 7 * 7 * 9 / 1e12)
+
+
+def test_closed_forms_match_schedule_simulation():
+    """eqs 6/9 vs the discrete-event simulator, within one op duration."""
+    blocks = _blocks()
+    R = 1e12
+    fwd_cf = lt.forward_lifetimes(blocks, R)
+    bwd_cf = lt.backward_lifetimes(blocks, R)
+    fwd, bwd = sc.simulate_training_iteration(blocks, R)
+
+    tol = max(lt.latency(b.g.macs, R) for b in blocks) + \
+        2 * max(lt.latency(b.f2.macs, R) for b in blocks)
+    cf_max = max(max(max(d.values()) for d in fwd_cf),
+                 max(max(d.values()) for d in bwd_cf))
+    sim_max = max(fwd.max_lifetime, bwd.max_lifetime)
+    assert abs(cf_max - sim_max) <= tol, (cf_max, sim_max, tol)
+    assert lt.max_data_lifetime(blocks, R) == pytest.approx(cf_max)
+
+
+def test_schedule_dependency_graph_is_dag():
+    blocks = _blocks(3)
+    g = sc.dependency_graph(sc.forward_ops(blocks, 1e12) +
+                            sc.backward_ops(blocks, 1e12))
+    assert g.number_of_nodes() == 3 * 16
+
+
+def test_reversible_peak_memory_constant_in_depth():
+    """The paper's memory claim at the scheduler level: peak live set is
+    O(1) in depth for the reversible pattern."""
+    R = 1e12
+    p4 = sc.simulate_training_iteration(_blocks(4), R)[0].peak_live_bits
+    p16 = sc.simulate_training_iteration(_blocks(16), R)[0].peak_live_bits
+    assert p16 <= p4 * 1.05
+
+
+def test_lifetime_scales_inverse_with_throughput():
+    blocks = _blocks()
+    assert lt.max_data_lifetime(blocks, 2e12) == pytest.approx(
+        lt.max_data_lifetime(blocks, 1e12) / 2)
+
+
+def test_array_utilization_sublinear():
+    """Table III: growing the array shrinks lifetime sub-linearly."""
+    blocks = _blocks()
+    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
+    r6 = lt.array_throughput(6, 500e6, specs)
+    r12 = lt.array_throughput(12, 500e6, specs)
+    assert r6 < r12 < 4 * r6          # 4× cells, < 4× effective throughput
+    l6 = lt.max_data_lifetime(blocks, r6)
+    l12 = lt.max_data_lifetime(blocks, r12)
+    assert l12 < l6                    # bigger array ⇒ shorter lifetime
+
+
+def test_camel_iteration_refresh_free_at_paper_scale():
+    """Fig 23a: paper-scale Branch-6 blocks stay under 3.4 µs @ 100 °C."""
+    cfg = hw.SystemConfig(temp_c=100.0)
+    blocks = _blocks(6, batch=1, spatial=7, cb=32, ck=64)
+    rep = hw.iteration(cfg, blocks, reversible=True)
+    assert rep.refresh_free, rep.max_lifetime_s
+
+
+def test_eta_advantage_over_sram_only():
+    """Fig 24(b): DuDNN+CAMEL ≥2× lower ETA than FR+SRAM-only."""
+    blocks = _blocks(6, batch=48, spatial=7, cb=64, ck=256)
+    camel = hw.tta_eta(hw.SystemConfig(), blocks, 1000, reversible=True)
+    sram = hw.tta_eta(hw.SRAM_ONLY, blocks, 1000, reversible=False)
+    assert sram["eta_j"] / camel["eta_j"] >= 2.0, (
+        sram["eta_j"], camel["eta_j"])
+    assert sram["tta_s"] / camel["tta_s"] > 1.0
+
+
+def test_irreversible_spills_offchip():
+    blocks = _blocks(6, batch=48, spatial=7, cb=64, ck=256)
+    rep = hw.iteration(hw.SRAM_ONLY, blocks, reversible=False)
+    assert rep.offchip_bits > 0
+    rev = hw.iteration(hw.SystemConfig(), blocks, reversible=True)
+    assert rev.offchip_bits == 0

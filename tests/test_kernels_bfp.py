@@ -1,0 +1,117 @@
+"""Pallas BFP kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps per the kernel-testing contract; hypothesis drives the
+random shape exploration at a modest example count (CPU interpret is slow).
+"""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import ops, ref
+from repro.kernels.bfp_matmul import bfp_matmul
+from repro.kernels.bfp_quant import bfp_matmul_packed, bfp_quantize_pallas
+
+INTERP = dict(interpret=True)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=2.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (32, 32, 32),          # single block, single group row
+    (64, 96, 32),          # multi-group, uneven grid
+    (100, 70, 36),         # needs padding on every dim
+    (256, 128, 512),       # multi-block grid
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bfp_matmul_matches_ref(m, k, n, dtype):
+    a, b = _rand(0, (m, k), dtype), _rand(1, (k, n), dtype)
+    got = bfp_matmul(a, b, group=32, block_m=64, block_n=64, block_k=64, **INTERP)
+    want = ref.ref_bfp_matmul(a, b, group=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("group", [8, 16, 32])
+def test_bfp_matmul_group_sweep(group):
+    a, b = _rand(2, (64, 64)), _rand(3, (64, 64))
+    got = bfp_matmul(a, b, group=group, block_m=64, block_n=64, block_k=64, **INTERP)
+    want = ref.ref_bfp_matmul(a, b, group=group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_bfp_matmul_zero_gating_identical_result():
+    a = _rand(4, (64, 64))
+    a = a.at[:32, :].set(0.0)  # one all-zero operand tile
+    b = _rand(5, (64, 64))
+    ref_out = bfp_matmul(a, b, group=32, block_m=32, block_n=32, block_k=32,
+                         skip_zero_groups=False, **INTERP)
+    gated = bfp_matmul(a, b, group=32, block_m=32, block_n=32, block_k=32,
+                       skip_zero_groups=True, **INTERP)
+    np.testing.assert_allclose(np.asarray(gated), np.asarray(ref_out),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,n", [(32, 32), (96, 64), (70, 40)])
+def test_bfp_quantize_pallas_matches_ref(m, n):
+    x = _rand(6, (m, n), scale=3.0)
+    mant, exp = bfp_quantize_pallas(x, group=32, block_m=64, block_n=64, **INTERP)
+    rmant, rexp = ref.ref_bfp_quantize(x, group=32)
+    # pallas output is padded to block multiples; compare the valid region
+    np.testing.assert_array_equal(np.asarray(mant)[:rmant.shape[0], :rmant.shape[1]],
+                                  np.asarray(rmant))
+    np.testing.assert_array_equal(np.asarray(exp)[:rexp.shape[0], :rexp.shape[1]],
+                                  np.asarray(rexp))
+
+
+def test_bfp_matmul_packed_matches_ref():
+    a, b = _rand(7, (64, 96), scale=3.0), _rand(8, (96, 64), scale=3.0)
+    am, ae = ref.ref_bfp_quantize(a, group=32)
+    bm_, be = ref.ref_bfp_quantize(b, group=32)
+    got = bfp_matmul_packed(am, ae, bm_, be, group=32,
+                            block_m=32, block_n=32, block_k=32, **INTERP)
+    want = ref.ref_bfp_matmul_packed(am, ae, bm_, be, group=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_bfp_dense_grads_use_transposed_bfp():
+    """bfp_dense backward == manual BFP matmuls with transposed operands."""
+    cfg = ops.BFPKernelConfig(group=32, block_m=32, block_n=32, block_k=32,
+                              interpret=True)
+    x, w = _rand(9, (4, 8, 64)), _rand(10, (64, 32))
+    g = _rand(11, (4, 8, 32))
+
+    y, vjp = jax.vjp(lambda xx, ww: ops.bfp_dense(xx, ww, cfg), x, w)
+    dx, dw = vjp(g)
+
+    x2, g2 = x.reshape(-1, 64), g.reshape(-1, 32)
+    np.testing.assert_allclose(
+        np.asarray(dx), np.asarray(ref.ref_bfp_matmul(g2, w.T, group=32)
+                                   ).reshape(x.shape), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(dw), np.asarray(ref.ref_bfp_matmul(x2.T, g2, group=32)),
+        rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.ref_bfp_matmul(x2, w, group=32)
+                                  ).reshape(4, 8, 32), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 3), k=st.integers(1, 3), n=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+)
+def test_property_kernel_vs_oracle_random_blocks(m, k, n, seed):
+    """Random multi-block shapes (multiples of 32) agree with the oracle."""
+    a = _rand(seed, (32 * m, 32 * k))
+    b = _rand(seed + 1, (32 * k, 32 * n))
+    got = bfp_matmul(a, b, group=32, block_m=32, block_n=32, block_k=32, **INTERP)
+    want = ref.ref_bfp_matmul(a, b, group=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

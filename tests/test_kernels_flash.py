@@ -1,0 +1,87 @@
+"""Pallas flash attention vs the pure-jnp full-attention oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models import layers as L
+
+
+def _ref(q, k, v, causal, softcap=None):
+    """Oracle: layers.full_attention on [B,S,H,d] layout."""
+    out = L.full_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=causal,
+                           softcap=softcap)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _inputs(key, b, h, kv, sq, skv, d, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, skv, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, skv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,d", [
+    (1, 2, 2, 64, 64, 16),     # MHA, single block pair
+    (2, 4, 2, 128, 128, 32),   # GQA 2:1, multi-block
+    (1, 8, 2, 64, 128, 16),    # GQA 4:1, rectangular
+    (1, 3, 1, 96, 96, 8),      # MQA, 3 heads
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(b, h, kv, sq, skv, d, causal):
+    q, k, v = _inputs(0, b, h, kv, sq, skv, d)
+    got = flash_attention(q, k, v, causal=causal, q_chunk=32, kv_chunk=32,
+                          interpret=True)
+    want = _ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_softcap():
+    q, k, v = _inputs(1, 1, 2, 2, 64, 64, 16)
+    got = flash_attention(q * 3, k * 3, v, causal=True, softcap=20.0,
+                          q_chunk=32, kv_chunk=32, interpret=True)
+    want = _ref(q * 3, k * 3, v, True, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_io():
+    q, k, v = _inputs(2, 1, 2, 2, 64, 64, 16, dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32,
+                          interpret=True)
+    assert got.dtype == jnp.bfloat16
+    want = _ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_attention_layer_flash_path_matches_blockwise():
+    """The runtime integration: AttnConfig(use_flash=True) end-to-end."""
+    base = dict(d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                blockwise_threshold=8)
+    cfg_ref = L.AttnConfig(**base)
+    cfg_flash = L.AttnConfig(**base, use_flash=True, flash_interpret=True,
+                             q_chunk=16, kv_chunk=16)
+    p = L.attn_init(jax.random.PRNGKey(5), cfg_ref)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64, 32))
+    pol = L.Policy(compute_dtype=jnp.float32)
+    ref = L.attention_layer(p, x, cfg_ref, policy=pol)
+    got = L.attention_layer(p, x, cfg_flash, policy=pol)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_chunk_sweep():
+    q, k, v = _inputs(3, 1, 2, 1, 128, 128, 16)
+    want = _ref(q, k, v, True)
+    for qc, kc in ((16, 32), (32, 16), (64, 64), (128, 128)):
+        got = flash_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"chunks {(qc, kc)}")

@@ -1,0 +1,133 @@
+"""Layer primitives: attention variants agree with each other; norms; rope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+P32 = L.Policy(compute_dtype=jnp.float32)
+
+
+def _qkv(key, b=2, sq=64, skv=64, nkv=2, g=2, hd=8):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(kq, (b, sq, nkv * g, hd))   # flat query heads
+    k = jax.random.normal(kk, (b, skv, nkv, hd))
+    v = jax.random.normal(kv, (b, skv, nkv, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("causal_skip", [False, True])
+def test_blockwise_matches_full(causal, window, causal_skip):
+    q, k, v = _qkv(0)
+    want = L.full_attention(q, k, v, causal=causal, window=window)
+    got = L.blockwise_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=16, kv_chunk=16,
+                                causal_skip=causal_skip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_unaligned_lengths():
+    q, k, v = _qkv(1, sq=50, skv=50)
+    want = L.full_attention(q, k, v, causal=True)
+    got = L.blockwise_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_softcap_applied():
+    q, k, v = _qkv(2)
+    a = L.full_attention(q * 10, k * 10, v, causal=True, softcap=5.0)
+    b = L.full_attention(q * 10, k * 10, v, causal=True, softcap=None)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_decode_matches_incremental_full():
+    """Decoding token-by-token equals full causal attention, incl. rope."""
+    cfg = L.AttnConfig(d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                       blockwise_threshold=10_000)
+    key = jax.random.PRNGKey(3)
+    p = L.attn_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 6, 32))
+
+    full = L.attention_layer(p, x, cfg, policy=P32)
+
+    cache = L.attn_cache_init(cfg, batch=2, max_len=8, dtype=jnp.float32)
+    outs = []
+    for t in range(6):
+        o, cache = L.attention_decode(p, x[:, t:t + 1], cache, cfg, policy=P32)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_decode_matches_layer():
+    cfg = L.AttnConfig(d_model=32, n_heads=4, n_kv=4, head_dim=8, window=3,
+                       blockwise_threshold=10_000)
+    p = L.attn_init(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 7, 32))
+    full = L.attention_layer(p, x, cfg, policy=P32)
+    cache = L.attn_cache_init(cfg, batch=1, max_len=8, dtype=jnp.float32)
+    outs = []
+    for t in range(7):
+        o, cache = L.attention_decode(p, x[:, t:t + 1], cache, cfg, policy=P32)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_cross_attention_no_causal():
+    cfg = L.AttnConfig(d_model=16, n_heads=2, n_kv=2, head_dim=8,
+                       rope_theta=None)
+    p = L.attn_init(jax.random.PRNGKey(7), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 5, 16))
+    enc = jax.random.normal(jax.random.PRNGKey(9), (1, 11, 16))
+    out = L.attention_layer(p, x, cfg, policy=P32, kv_x=enc)
+    assert out.shape == (1, 5, 16)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_rope_relative_property():
+    """RoPE: scores depend only on relative positions."""
+    x = jax.random.normal(jax.random.PRNGKey(10), (1, 4, 2, 8))
+    y = jax.random.normal(jax.random.PRNGKey(11), (1, 4, 2, 8))
+    p0 = jnp.arange(4)[None, :]
+    p5 = p0 + 5
+    s0 = jnp.einsum("bshd,bthd->bhst", L.rope(x, p0), L.rope(y, p0))
+    s5 = jnp.einsum("bshd,bthd->bhst", L.rope(x, p5), L.rope(y, p5))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s5), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_norms():
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(12), (3, d)) * 4 + 2
+    rn = L.rmsnorm(L.rmsnorm_init(d), x)
+    assert np.allclose(np.asarray(jnp.mean(rn**2, -1)), 1.0, atol=1e-3)
+    ln = L.layernorm(L.layernorm_init(d), x)
+    assert np.allclose(np.asarray(jnp.mean(ln, -1)), 0.0, atol=1e-3)
+    assert np.allclose(np.asarray(jnp.var(ln, -1)), 1.0, atol=1e-2)
+
+
+def test_vocab_padding_masks_logits():
+    p = L.embed_init(jax.random.PRNGKey(13), vocab=100, d=8, pad_to=16)
+    assert p["table"].shape[0] == 112
+    x = jax.random.normal(jax.random.PRNGKey(14), (1, 2, 8))
+    logits = L.unembed_logits(p, x, vocab=100, policy=P32)
+    assert logits.shape == (1, 2, 112)
+    assert np.all(np.asarray(logits[..., 100:]) < -1e29)
+
+
+def test_bfp_dense_matches_reference():
+    from repro.core import bfp
+    p = L.dense_init(jax.random.PRNGKey(15), 12, 8)
+    x = jax.random.normal(jax.random.PRNGKey(16), (4, 12))
+    pol = L.BFPPolicy(enabled=True, group=(3, 3))
+    got = L.dense(p, x, policy=P32, bfp=pol)
+    want = bfp.bfp_matmul_ref(x, p["w"], group=(3, 3))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
