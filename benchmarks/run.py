@@ -2,19 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (from the
 multi-pod dry-run artifacts) is appended when ``experiments/dryrun`` exists.
+``--json PATH`` additionally writes the rows as machine-readable records
+({"name", "us_per_call", "derived"}) for perf-trajectory tracking.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
+                                            [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
-from benchmarks import (bfp_fidelity, fig21_ablations, fig22_retention,
-                        fig23_lifetime, fig24_tta_eta, table2_accuracy,
-                        table3_arraysize)
+from benchmarks import (bank_occupancy, bfp_fidelity, fig21_ablations,
+                        fig22_retention, fig23_lifetime, fig24_tta_eta,
+                        table2_accuracy, table3_arraysize)
 
 SUITES = {
     "table2": table2_accuracy.run,      # accuracy arms (slow-ish: trains)
@@ -24,8 +28,19 @@ SUITES = {
     "fig24": fig24_tta_eta.run,         # TTA / ETA vs baselines
     "table3": table3_arraysize.run,     # array size vs lifetime
     "bfp": bfp_fidelity.run,            # §III-E fidelity + kernel timing
+    "bank_occupancy": bank_occupancy.run,   # repro.memory controller
 }
 SLOW = {"table2", "fig21", "bfp"}       # these train models on CPU
+
+
+def _row_record(row: str) -> dict:
+    parts = row.split(",", 2) + ["", ""]          # tolerate short rows
+    name, us, derived = parts[0], parts[1], parts[2]
+    try:
+        us_val: float = float(us)
+    except ValueError:
+        us_val = 0.0
+    return {"name": name, "us_per_call": us_val, "derived": derived}
 
 
 def _roofline_rows() -> list[str]:
@@ -52,30 +67,41 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
     ap.add_argument("--skip-slow", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON records to PATH")
     args = ap.parse_args()
 
     names = list(SUITES) if not args.only else args.only.split(",")
     failures = 0
+    records = []
+
+    def emit(row: str) -> None:
+        print(row)
+        records.append(_row_record(row))
+
     print("name,us_per_call,derived")
     for name in names:
         if name == "roofline":
             continue
         if args.skip_slow and name in SLOW:
-            print(f"{name}/skipped,0,--skip-slow")
+            emit(f"{name}/skipped,0,--skip-slow")
             continue
         t0 = time.time()
         try:
             for row in SUITES[name]():
-                print(row)
-            print(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},ok")
+                emit(row)
+            emit(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},ok")
         except Exception as e:
             failures += 1
             traceback.print_exc()
-            print(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},"
-                  f"ERROR:{type(e).__name__}")
+            emit(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},"
+                 f"ERROR:{type(e).__name__}")
     if args.only is None or "roofline" in args.only:
         for row in _roofline_rows():
-            print(row)
+            emit(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
     sys.exit(1 if failures else 0)
 
 

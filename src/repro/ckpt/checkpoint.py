@@ -30,7 +30,11 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:              # optional: falls back to uncompressed blobs
+    zstandard = None
 
 from repro.utils import path_str
 
@@ -98,7 +102,7 @@ class Checkpointer:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         cctx = zstandard.ZstdCompressor(level=self.cfg.compress_level) \
-            if self.cfg.compress_level else None
+            if (self.cfg.compress_level and zstandard is not None) else None
 
         entries = {}
         for i, (path, leaf) in enumerate(_leaf_paths(host_state)):
@@ -156,14 +160,21 @@ class Checkpointer:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self.dir / f"step_{step:012d}"
         manifest = msgpack.unpackb((d / _MANIFEST).read_bytes())
-        dctx = zstandard.ZstdDecompressor()
+        dctx = zstandard.ZstdDecompressor() if zstandard is not None else None
 
         values = {}
         for path, e in manifest["entries"].items():
             blob = (d / e["file"]).read_bytes()
             if (zlib.crc32(blob) & 0xFFFFFFFF) != e["crc32"]:
                 raise IOError(f"checksum mismatch for {path} at step {step}")
-            raw = dctx.decompress(blob) if e["compressed"] else blob
+            if e["compressed"]:
+                if dctx is None:
+                    raise ImportError(
+                        f"checkpoint step {step} is zstd-compressed but "
+                        "the 'zstandard' package is not installed")
+                raw = dctx.decompress(blob)
+            else:
+                raw = blob
             arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(
                 e["shape"]).copy()       # writable
             values[path] = arr

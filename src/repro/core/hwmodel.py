@@ -21,6 +21,7 @@ from typing import Sequence
 from repro.core import edram as ed
 from repro.core.lifetime import DuBlockSpec, array_throughput
 from repro.core.schedule import simulate_training_iteration
+from repro.memory import trace as mtr
 
 BFP_BITS = 58 / 9          # §III-E: 6.44 bits/value
 FP16_BITS = 16.0
@@ -38,6 +39,12 @@ class SystemConfig:
     onchip_bits: float = 12 * 32 * 1024 * 8   # 12×32KB eDRAM
     temp_c: float = 60.0
     edram: ed.EDRAMConfig = ed.EDRAMConfig()
+    offchip_bw_bps: float = 272e9  # bits/s; LPDDR5-class x32, 34 GB/s
+    # bank-level controller (repro.memory): trace-driven replay of the
+    # schedule instead of the scalar stored/needs_refresh arithmetic
+    use_controller: bool = True
+    refresh_policy: str = "selective"   # always | none | selective
+    alloc_policy: str = "pingpong"      # pingpong | first_fit | lifetime
 
 
 SRAM_ONLY = SystemConfig(
@@ -57,6 +64,11 @@ class IterationReport:
     refresh_free: bool
     peak_live_bits: float
     offchip_bits: float
+    # bank-level controller results (None on the scalar/SRAM paths); the
+    # scalar edram_energy total is kept as a cross-validation oracle
+    controller: object = None
+    scalar_memory_j: float = 0.0
+    stall_s: float = 0.0
 
 
 def iteration(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
@@ -99,10 +111,31 @@ def iteration(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
         max_life = total_time / batch
         offchip = max(0.0, stored - cfg.onchip_bits) * 2
 
+    controller = None
+    stall_s = 0.0
+    scalar_memory_j = 0.0
     if cfg.use_edram:
         rf = ed.refresh_free(max_life, cfg.temp_c)
         mem = ed.edram_energy(cfg.edram, read_bits, write_bits, stored,
                               total_time, cfg.temp_c, needs_refresh=not rf)
+        scalar_memory_j = mem.total_j
+        if cfg.use_controller and reversible:
+            # the trace encodes the reversible computation pattern; the
+            # irreversible arm's whole-iteration buffering stays scalar
+            events, durations, t_total = mtr.merge_traces(fwd, bwd)
+            controller = mtr.replay(
+                events, cfg.edram, temp_c=cfg.temp_c, duration_s=t_total,
+                refresh_policy=cfg.refresh_policy,
+                alloc_policy=cfg.alloc_policy, freq_hz=cfg.freq_hz,
+                sample_scale=batch, op_durations=durations)
+            mem = controller.energy
+            stall_s = controller.stall_s
+            offchip = controller.offchip_bits
+            # report the bank-level verdict, not the scalar one: the
+            # iteration is refresh-free iff no bank actually refreshed and
+            # no over-retention bank was left unrefreshed (data loss)
+            rf = (not any(b.refreshed for b in controller.banks)
+                  and controller.safe)
     else:
         rf = True
         mem = ed.sram_energy(cfg.edram, read_bits, write_bits, offchip)
@@ -110,7 +143,8 @@ def iteration(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
     compute_j = macs * (cfg.mac_pj if cfg.use_edram else cfg.mac_pj_fp16) \
         * 1e-12
     return IterationReport(
-        latency_s=total_time + (offchip / 8 / 34e9 if offchip else 0.0),
+        latency_s=total_time + stall_s
+        + (offchip / cfg.offchip_bw_bps if offchip else 0.0),
         energy_j=compute_j + mem.total_j,
         compute_j=compute_j,
         memory_j=mem.total_j,
@@ -118,6 +152,9 @@ def iteration(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
         refresh_free=rf,
         peak_live_bits=stored,
         offchip_bits=offchip,
+        controller=controller,
+        scalar_memory_j=scalar_memory_j,
+        stall_s=stall_s,
     )
 
 

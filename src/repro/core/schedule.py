@@ -17,6 +17,24 @@ import networkx as nx
 
 from repro.core.lifetime import DuBlockSpec, OpSpec, latency
 
+EVENT_KINDS = ("alloc", "write", "read", "free")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One tensor touch on the schedule timeline (consumed by the
+    ``repro.memory`` controller's trace-driven replay).
+
+    ``alloc`` marks data live at iteration start (no write energy);
+    ``write``/``read`` carry the op's traffic; ``free`` is the overwrite
+    point — the last reader has run and the words are dead.
+    """
+    time: float
+    op: str
+    tensor: str
+    kind: str
+    bits: float
+
 
 @dataclasses.dataclass(frozen=True)
 class Op:
@@ -34,6 +52,7 @@ class SimResult:
     write_bits: float
     total_time: float
     schedule: list
+    trace: list = dataclasses.field(default_factory=list)  # TraceEvents
 
     @property
     def max_lifetime(self) -> float:
@@ -135,30 +154,41 @@ def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
     t_now = 0.0
     write_time: dict = {}
     lifetimes: dict = {}
-    live: dict = {t: 0.0 for t in live_at_start}
-    peak = sum(sizes.get(t, 0.0) for t in live)
+    # boot tensors occupy real storage until their last reader frees them
+    live: dict = {t: sizes.get(t, 0.0) for t in live_at_start}
+    peak = sum(live.values())
     read_bits = write_bits = 0.0
     schedule = []
+    trace = [TraceEvent(time=0.0, op="<boot>", tensor=t, kind="alloc",
+                        bits=sizes.get(t, 0.0)) for t in live_at_start]
     for op in ops:
         start, end = t_now, t_now + op.duration
         t_now = end
         schedule.append((op.name, start, end))
         for t in op.reads:
             read_bits += sizes.get(t, 0.0)
+            trace.append(TraceEvent(time=start, op=op.name, tensor=t,
+                                    kind="read", bits=sizes.get(t, 0.0)))
         for t in op.writes:
             write_bits += sizes.get(t, 0.0)
             write_time[t] = end
             live[t] = sizes.get(t, 0.0)
+            trace.append(TraceEvent(time=end, op=op.name, tensor=t,
+                                    kind="write", bits=sizes.get(t, 0.0)))
         peak = max(peak, sum(live.values()))
         # overwrite policy: free every tensor whose last reader just ran
         for t in op.reads:
             if last_read_op.get(t) == op.name:
                 if t in write_time:
                     lifetimes[t] = end - write_time.pop(t)
+                if t in live:
+                    trace.append(TraceEvent(time=end, op=op.name, tensor=t,
+                                            kind="free",
+                                            bits=sizes.get(t, 0.0)))
                 live.pop(t, None)
     return SimResult(lifetimes=lifetimes, peak_live_bits=peak,
                      read_bits=read_bits, write_bits=write_bits,
-                     total_time=t_now, schedule=schedule)
+                     total_time=t_now, schedule=schedule, trace=trace)
 
 
 def simulate_training_iteration(blocks: Sequence[DuBlockSpec], R: float,

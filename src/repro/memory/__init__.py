@@ -1,0 +1,21 @@
+"""Bank-level eDRAM memory-controller subsystem (CAMEL §V, Figs 17/19/23).
+
+Turns the scalar retention/energy model in ``core.edram`` into an
+event-driven controller: tensors are placed into 58-bit-word banks
+(``allocator``), per-bank occupancy and port contention are tracked
+(``banks``), refresh is scheduled per bank — skipped entirely for banks
+whose resident data dies before retention (``refresh``) — and the whole
+thing is driven by memory traces emitted by ``core.schedule.simulate()``
+(``trace``).
+"""
+from repro.memory.banks import BankGeometry, BankState, port_service_s
+from repro.memory.allocator import ALLOC_POLICIES, Allocator, Placement
+from repro.memory.refresh import REFRESH_POLICIES, RefreshScheduler
+from repro.memory.trace import (BankReport, ControllerReport, TraceEvent,
+                                merge_traces, replay)
+
+__all__ = [
+    "ALLOC_POLICIES", "Allocator", "BankGeometry", "BankReport", "BankState",
+    "ControllerReport", "Placement", "REFRESH_POLICIES", "RefreshScheduler",
+    "TraceEvent", "merge_traces", "port_service_s", "replay",
+]

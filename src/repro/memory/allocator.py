@@ -1,0 +1,186 @@
+"""Tensor-to-bank placement engine (CAMEL §V-B, Fig 17).
+
+Three policies:
+
+``pingpong``
+    FIFO ping-pong placement (Fig 17): each new tensor starts at the bank
+    after the previous allocation's first bank, so producer/consumer
+    tensors of adjacent ops land in different banks and the per-bank ports
+    don't serialize the dataflow.
+``first_fit``
+    Lowest-index bank with space — the densest packing, worst conflicts.
+``lifetime``
+    Lifetime-aware coloring: tensors whose expected lifetime is under the
+    retention floor are steered away from banks holding over-retention
+    tensors (and vice versa), so short-lived data shares banks that the
+    ``selective`` refresh policy can leave entirely unrefreshed.
+
+A tensor may stripe across several banks; when no combination of free
+words can hold it, the whole tensor spills off-chip (partial spills would
+split a BFP group's shared exponent from its mantissas).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.memory.banks import BankGeometry, BankState
+
+ALLOC_POLICIES = ("pingpong", "first_fit", "lifetime")
+
+OFFCHIP = "offchip"
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where a tensor lives: ``spans`` of (bank index, words), or off-chip."""
+    tensor: str
+    bits: float
+    spans: tuple          # ((bank_idx, words), ...); empty when spilled
+    expected_lifetime_s: Optional[float] = None
+
+    @property
+    def offchip(self) -> bool:
+        return not self.spans
+
+
+class Allocator:
+    """Places tensors into banks; tracks spills and placement history."""
+
+    def __init__(self, geometry: BankGeometry, policy: str = "pingpong",
+                 retention_s: Optional[float] = None):
+        if policy not in ALLOC_POLICIES:
+            raise ValueError(f"unknown alloc policy {policy!r}; "
+                             f"choose from {ALLOC_POLICIES}")
+        self.geometry = geometry
+        self.policy = policy
+        self.retention_s = retention_s
+        self.banks = [BankState(i, geometry) for i in range(geometry.n_banks)]
+        self.placements: dict[str, Placement] = {}
+        self.spill_bits = 0.0
+        self.spilled: list[str] = []
+        self._next_bank = 0
+
+    # -- policy: bank visit order ----------------------------------------
+    def _tiers(self, expected_lifetime_s: Optional[float]) -> list[list]:
+        """Bank indices in placement-preference tiers.  Striping spreads a
+        tensor across one tier before touching the next, so the lifetime
+        policy keeps its coloring while still winning port bandwidth."""
+        n = self.geometry.n_banks
+        if self.policy == "first_fit":
+            return [list(range(n))]
+        if self.policy == "pingpong":
+            return [[(self._next_bank + i) % n for i in range(n)]]
+        # lifetime-aware coloring: prefer banks whose residents are on the
+        # same side of the retention floor as this tensor.
+        short = (self.retention_s is None or expected_lifetime_s is None
+                 or expected_lifetime_s < self.retention_s)
+        match, other, empty = [], [], []
+        for b in self.banks:
+            if not b.resident:
+                empty.append(b.index)
+                continue
+            # classify by what is resident *now*: any tensor expected to
+            # outlive retention poisons the bank for short-lived data
+            bank_short = all(
+                self.placements[t].expected_lifetime_s is None
+                or self.retention_s is None
+                or self.placements[t].expected_lifetime_s < self.retention_s
+                for t in b.resident)
+            (match if bank_short == short else other).append(b.index)
+        return [match, empty, other]
+
+    # -- allocation ------------------------------------------------------
+    def place(self, tensor: str, bits: float, now: float,
+              expected_lifetime_s: Optional[float] = None) -> Placement:
+        """Allocate ``tensor``; spills off-chip when capacity is exceeded."""
+        if tensor in self.placements:
+            raise ValueError(f"{tensor} already placed")
+        need = self.geometry.words_for(bits)
+        tiers = self._tiers(expected_lifetime_s)
+        flat = [i for tier in tiers for i in tier]
+        free_total = sum(self.banks[i].free_words for i in flat)
+        if need > free_total:
+            self.spill_bits += bits
+            self.spilled.append(tensor)
+            p = Placement(tensor, bits, spans=(),
+                          expected_lifetime_s=expected_lifetime_s)
+            self.placements[tensor] = p
+            return p
+        # the lifetime policy packs over-retention tensors densely so they
+        # poison as few banks as possible (those banks refresh; the rest
+        # stay refresh-free); short-lived tensors stripe for bandwidth
+        long_lived = (self.policy == "lifetime"
+                      and self.retention_s is not None
+                      and expected_lifetime_s is not None
+                      and expected_lifetime_s >= self.retention_s)
+        takes: dict[int, int] = {}
+        remaining = need
+        for tier in tiers:
+            if remaining == 0:
+                break
+            if self.policy == "first_fit" or long_lived:
+                # dense packing: fill banks in order (worst port conflicts)
+                for i in tier:
+                    if remaining == 0:
+                        break
+                    take = min(remaining, self.banks[i].free_words)
+                    if take:
+                        takes[i] = take
+                        remaining -= take
+            else:
+                # striped: spread words evenly across the tier's banks so
+                # reads draw one word/cycle from many ports at once
+                # (Fig 17's bandwidth story)
+                while remaining > 0:
+                    active = [i for i in tier
+                              if self.banks[i].free_words > takes.get(i, 0)]
+                    if not active:
+                        break
+                    share = -(-remaining // len(active))        # ceil
+                    for i in active:
+                        room = self.banks[i].free_words - takes.get(i, 0)
+                        take = min(share, room, remaining)
+                        if take:
+                            takes[i] = takes.get(i, 0) + take
+                            remaining -= take
+                        if remaining == 0:
+                            break
+        spans = []
+        for i in flat:
+            if i in takes:
+                self.banks[i].allocate(tensor, takes[i], now)
+                spans.append((i, takes[i]))
+        if self.policy == "pingpong" and spans:
+            self._next_bank = (spans[0][0] + 1) % self.geometry.n_banks
+        p = Placement(tensor, bits, spans=tuple(spans),
+                      expected_lifetime_s=expected_lifetime_s)
+        self.placements[tensor] = p
+        return p
+
+    def rewrite(self, tensor: str, now: float) -> Placement:
+        """Overwrite in place (dead value reuse, Fig 12c)."""
+        p = self.placements[tensor]
+        for i, _ in p.spans:
+            self.banks[i].rewrite(tensor, now)
+        return p
+
+    def free(self, tensor: str, now: float) -> None:
+        p = self.placements.pop(tensor, None)
+        if p is None:
+            return
+        for i, _ in p.spans:
+            self.banks[i].free(tensor, now)
+
+    # -- introspection ---------------------------------------------------
+    def location(self, tensor: str) -> Optional[Placement]:
+        return self.placements.get(tensor)
+
+    @property
+    def used_bits(self) -> float:
+        return sum(b.occupied_bits for b in self.banks)
+
+    def occupancy(self) -> list[float]:
+        """Per-bank fill fraction (words used / words per bank)."""
+        w = self.geometry.words_per_bank
+        return [b.used_words / w for b in self.banks]

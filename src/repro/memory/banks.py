@@ -1,0 +1,127 @@
+"""Bank/word geometry and per-bank occupancy state (CAMEL §V-C/D).
+
+The eDRAM macro is organized as ``n_banks`` banks of 58-bit words — one
+word per 2D BFP group (4-bit shared exponent + 9 × 6-bit mantissas).  Each
+bank has one read and one write port moving one word per cycle, so tensors
+striped across more banks see higher aggregate bandwidth; two tensors
+resident in the same bank contend for its ports (the bank-conflict model
+``trace.replay`` charges stalls from).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class BankGeometry:
+    """Word/bank shape derived from an ``EDRAMConfig``."""
+    word_bits: int
+    words_per_bank: int
+    n_banks: int
+
+    @classmethod
+    def from_edram(cls, cfg) -> "BankGeometry":
+        # bank_kb is authoritative for capacity (matches
+        # edram.capacity_bits); the word count per bank follows from the
+        # 58-bit BFP word size.  EDRAMConfig.words_per_bank is the paper's
+        # *row* count (a row holds several words) — it sets refresh
+        # granularity in silicon, not storage capacity, so it does not
+        # enter the geometry here.
+        words = int(cfg.bank_kb * 1024 * 8 // cfg.word_bits)
+        return cls(word_bits=cfg.word_bits, words_per_bank=words,
+                   n_banks=cfg.n_banks)
+
+    @property
+    def bank_bits(self) -> int:
+        return self.word_bits * self.words_per_bank
+
+    @property
+    def total_bits(self) -> int:
+        return self.bank_bits * self.n_banks
+
+    @property
+    def total_words(self) -> int:
+        return self.words_per_bank * self.n_banks
+
+    def words_for(self, bits: float) -> int:
+        """Words needed to hold ``bits`` (ceil — a word is the unit)."""
+        return max(1, math.ceil(bits / self.word_bits)) if bits > 0 else 0
+
+
+def port_service_s(words: int, freq_hz: float) -> float:
+    """Time for one bank port to move ``words`` (one word/cycle)."""
+    return words / freq_hz if freq_hz > 0 else 0.0
+
+
+@dataclasses.dataclass
+class _Residency:
+    words: int
+    write_t: float
+
+
+class BankState:
+    """Occupancy, residency lifetimes, and traffic counters for one bank."""
+
+    def __init__(self, index: int, geometry: BankGeometry):
+        self.index = index
+        self.geometry = geometry
+        self.resident: dict[str, _Residency] = {}
+        self.used_words = 0
+        self.peak_words = 0
+        # traffic (bits) and port-busy time (s) for the conflict model
+        self.read_bits = 0.0
+        self.write_bits = 0.0
+        self.stall_s = 0.0
+        # refresh bookkeeping
+        self.max_resident_s = 0.0        # longest completed residency
+        self.refresh_count = 0
+        self.refresh_bits = 0.0
+        # ∫ occupied_bits dt — refresh energy integrates this
+        self.occ_bit_s = 0.0
+        self._last_t = 0.0
+
+    @property
+    def free_words(self) -> int:
+        return self.geometry.words_per_bank - self.used_words
+
+    @property
+    def occupied_bits(self) -> float:
+        return self.used_words * self.geometry.word_bits
+
+    def advance(self, now: float) -> None:
+        """Accumulate the occupancy integral up to ``now``."""
+        if now > self._last_t:
+            self.occ_bit_s += self.occupied_bits * (now - self._last_t)
+            self._last_t = now
+
+    def allocate(self, tensor: str, words: int, now: float) -> None:
+        if words > self.free_words:
+            raise ValueError(
+                f"bank {self.index}: {words} words > {self.free_words} free")
+        self.advance(now)
+        self.resident[tensor] = _Residency(words=words, write_t=now)
+        self.used_words += words
+        self.peak_words = max(self.peak_words, self.used_words)
+
+    def rewrite(self, tensor: str, now: float) -> None:
+        """In-place overwrite: residency lifetime restarts at ``now``."""
+        r = self.resident[tensor]
+        self.max_resident_s = max(self.max_resident_s, now - r.write_t)
+        r.write_t = now
+
+    def free(self, tensor: str, now: float) -> float:
+        """Release ``tensor``; returns its residency duration."""
+        r = self.resident.pop(tensor)
+        self.advance(now)
+        self.used_words -= r.words
+        dur = now - r.write_t
+        self.max_resident_s = max(self.max_resident_s, dur)
+        return dur
+
+    def finalize(self, now: float) -> None:
+        """Close the books at end of trace: still-resident tensors have
+        lived until ``now`` (they survive into the next iteration)."""
+        self.advance(now)
+        for r in self.resident.values():
+            self.max_resident_s = max(self.max_resident_s, now - r.write_t)

@@ -1,0 +1,107 @@
+"""Per-bank refresh scheduling (CAMEL §V-D, Figs 22/23).
+
+Policies:
+
+``always``
+    Conventional DRAM discipline: every bank holding data is refreshed
+    each retention interval, whether its contents need it or not.
+``none``
+    No refresh at all — only safe when every resident tensor's lifetime is
+    under retention (the pure co-design operating point, Fig 23).
+``selective``
+    The CAMEL controller: a bank is refreshed only while its longest
+    resident lifetime exceeds the retention floor; banks whose tensors all
+    die young are skipped.  Energy falls between ``none`` and ``always``
+    and no over-retention bank is ever left unrefreshed.
+
+The interval is temperature-adaptive — ``retention_s(temp_c) / guard`` —
+so the same schedule tightens automatically as the die heats up (Fig 22).
+Refresh energy integrates each refreshed bank's occupancy over time
+(∫occ·dt / interval × pJ/bit): a bank half-full for half the iteration
+costs a quarter of a full bank, which the scalar ``edram_energy`` model
+(peak-bits × intervals) can only upper-bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import edram as ed
+from repro.memory.banks import BankState, port_service_s
+
+REFRESH_POLICIES = ("always", "none", "selective")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshDecision:
+    bank: int
+    refreshed: bool
+    needs_refresh: bool        # max resident lifetime ≥ retention
+    refresh_j: float
+    refresh_count: int
+    stall_s: float
+
+
+class RefreshScheduler:
+    """Decides which banks to refresh and accounts energy + port stalls."""
+
+    def __init__(self, policy: str, temp_c: float, guard: float = 1.0,
+                 interval_s: float | None = None):
+        if policy not in REFRESH_POLICIES:
+            raise ValueError(f"unknown refresh policy {policy!r}; "
+                             f"choose from {REFRESH_POLICIES}")
+        self.policy = policy
+        self.temp_c = temp_c
+        self.retention_s = ed.retention_s(temp_c)
+        self.interval_s = (interval_s if interval_s is not None
+                           else ed.refresh_interval_s(temp_c, guard))
+
+    def needs_refresh(self, bank: BankState) -> bool:
+        """The per-bank co-design criterion (eq 10 at bank granularity)."""
+        return bank.max_resident_s >= self.retention_s
+
+    def account(self, banks: Sequence[BankState], duration_s: float,
+                freq_hz: float, refresh_pj_per_bit: float,
+                lifetime_scale: float = 1.0) -> list[RefreshDecision]:
+        """Charge refresh energy/stalls for one iteration of ``duration_s``.
+
+        ``lifetime_scale`` rescales observed residency durations before the
+        retention comparison (the weight-stationary dataflow streams the
+        batch sample-by-sample, so a trace recorded at whole-batch op times
+        represents per-sample lifetimes 1/batch as long — hwmodel passes
+        1/batch, mirroring its scalar path).
+
+        Mutates each bank's ``refresh_count``/``refresh_bits``/``stall_s``
+        counters and returns per-bank decisions.
+        """
+        ticks = math.ceil(duration_s / self.interval_s) \
+            if duration_s > 0 else 0
+        out = []
+        for b in banks:
+            needs = (b.max_resident_s * lifetime_scale) >= self.retention_s
+            held_data = b.occ_bit_s > 0
+            refreshed = held_data and (
+                self.policy == "always"
+                or (self.policy == "selective" and needs))
+            refresh_j = 0.0
+            count = 0
+            stall = 0.0
+            if refreshed:
+                # ∫occ·dt / interval — fractional intervals included, so a
+                # short iteration still pays its pro-rata share
+                bit_intervals = b.occ_bit_s / self.interval_s
+                refresh_j = bit_intervals * refresh_pj_per_bit * 1e-12
+                count = ticks
+                # each refresh pulse occupies the ports for its resident
+                # words (read + restore through the same word line)
+                words = b.peak_words
+                stall = count * port_service_s(words, freq_hz)
+                b.refresh_count += count
+                b.refresh_bits += bit_intervals
+                b.stall_s += stall
+            out.append(RefreshDecision(bank=b.index, refreshed=refreshed,
+                                       needs_refresh=needs,
+                                       refresh_j=refresh_j,
+                                       refresh_count=count, stall_s=stall))
+        return out

@@ -1,0 +1,228 @@
+"""Memory-trace records and trace-driven controller replay (CAMEL §V).
+
+``core.schedule.simulate()`` emits one :class:`TraceEvent` per tensor
+touch (alloc/write/read/free, timestamped on the op timeline).  ``replay``
+drives the full controller — allocator placement, per-bank occupancy and
+port contention, per-bank refresh — over that trace and returns a
+:class:`ControllerReport` that ``core.hwmodel.iteration()`` consumes in
+place of the scalar ``stored``/``needs_refresh`` arithmetic.
+
+Per-sample normalization: the weight-stationary dataflow streams the
+mini-batch sample-by-sample through ping-pong buffers (Fig 17a), so a
+tensor's *buffer* is per-sample sized and persists for the whole
+producer→consumer window, while its *data* lifetime is that window divided
+by the batch.  ``replay(sample_scale=batch)`` therefore places
+``bits/batch`` into banks, charges traffic energy on the full ``bits``,
+and compares residency × ``1/batch`` against retention — exactly the
+accounting that fits batch-48 training under a 3.4 µs retention (Fig 23a).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core import edram as ed
+from repro.core.schedule import EVENT_KINDS, TraceEvent
+from repro.memory.allocator import Allocator
+from repro.memory.banks import BankGeometry, port_service_s
+from repro.memory.refresh import RefreshScheduler
+
+
+def merge_traces(fwd, bwd) -> tuple[list[TraceEvent], dict, float]:
+    """Concatenate forward + backward ``SimResult`` traces onto one
+    timeline; returns (events, op_durations, total_time)."""
+    events = list(fwd.trace)
+    offset = fwd.total_time
+    durations = {name: end - start for name, start, end in fwd.schedule}
+    for name, start, end in bwd.schedule:
+        durations[name] = end - start
+    for ev in bwd.trace:
+        # tensors already resident from the forward pass (b1_L, b2_L, …)
+        # must not be re-allocated by the backward trace's boot events
+        events.append(dataclasses.replace(ev, time=ev.time + offset))
+    return events, durations, fwd.total_time + bwd.total_time
+
+
+@dataclasses.dataclass(frozen=True)
+class BankReport:
+    """Per-bank breakdown consumed by benchmarks and tests."""
+    index: int
+    read_bits: float
+    write_bits: float
+    refresh_bits: float            # bit-intervals actually refreshed
+    refresh_count: int
+    refresh_j: float
+    stall_s: float
+    peak_words: int
+    peak_occupancy: float          # peak_words / words_per_bank
+    max_resident_lifetime_s: float  # per-sample (already scaled)
+    needs_refresh: bool
+    refreshed: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerReport:
+    """What the controller did over one iteration's trace."""
+    refresh_policy: str
+    alloc_policy: str
+    temp_c: float
+    duration_s: float
+    banks: tuple                   # BankReport per bank
+    read_j: float
+    write_j: float
+    refresh_j: float
+    offchip_j: float
+    stall_s: float
+    spill_bits: float              # capacity-overflow bits (per-sample)
+    offchip_bits: float            # traffic to/from spilled tensors
+    spilled_tensors: tuple
+
+    @property
+    def energy(self) -> ed.MemoryEnergy:
+        return ed.MemoryEnergy(read_j=self.read_j, write_j=self.write_j,
+                               refresh_j=self.refresh_j,
+                               offchip_j=self.offchip_j)
+
+    @property
+    def refresh_count(self) -> int:
+        return sum(b.refresh_count for b in self.banks)
+
+    @property
+    def safe(self) -> bool:
+        """No silent data loss: every over-retention bank was refreshed."""
+        return all(b.refreshed for b in self.banks if b.needs_refresh)
+
+
+def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
+           temp_c: float, duration_s: float,
+           refresh_policy: str = "selective",
+           alloc_policy: str = "pingpong",
+           freq_hz: float = 500e6,
+           sample_scale: float = 1.0,
+           op_durations: Optional[dict] = None,
+           refresh_guard: float = 1.0) -> ControllerReport:
+    """Replay ``events`` through the bank-level controller.
+
+    ``sample_scale`` is the mini-batch size (see module docstring);
+    ``op_durations`` (op name → seconds) enables the bank-conflict model —
+    an op whose per-bank port time exceeds its compute time stalls the
+    array for the difference.
+    """
+    geom = BankGeometry.from_edram(cfg)
+    sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard)
+    alloc = Allocator(geom, policy=alloc_policy,
+                      retention_s=sched.retention_s * sample_scale)
+
+    # prepass: expected residency window per tensor (write → free), at
+    # trace time — the lifetime-aware allocator colors banks with it.  A
+    # tensor can be resident more than once (freed in forward, re-written
+    # in backward); each free closes one window, and the classification
+    # conservatively uses the tensor's longest single residency.
+    first_seen: dict[str, float] = {}
+    window: dict[str, float] = {}
+    for ev in events:
+        if ev.kind in ("alloc", "write"):
+            first_seen.setdefault(ev.tensor, ev.time)
+        elif ev.kind == "free" and ev.tensor in first_seen:
+            w = ev.time - first_seen.pop(ev.tensor)
+            window[ev.tensor] = max(window.get(ev.tensor, 0.0), w)
+    for t, t0 in first_seen.items():     # never freed ⇒ lives to trace end
+        window[t] = max(window.get(t, 0.0), duration_s - t0)
+
+    read_j = write_j = offchip_j = 0.0
+    offchip_bits = 0.0
+    # per-op, per-bank words touched (the conflict model's unit)
+    op_read_words: dict[str, dict[int, int]] = {}
+    op_write_words: dict[str, dict[int, int]] = {}
+
+    def _touch(table, op, placement, bits):
+        # distribute the op's traffic words over the tensor's bank spans
+        words = geom.words_for(bits)
+        span_total = max(1, sum(w for _, w in placement.spans))
+        per = table.setdefault(op, {})
+        for bank_idx, span_words in placement.spans:
+            per[bank_idx] = per.get(bank_idx, 0) + max(
+                1, round(words * span_words / span_total))
+
+    for ev in events:
+        if ev.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown trace event kind {ev.kind!r}")
+        if ev.kind in ("alloc", "write"):
+            p = alloc.location(ev.tensor)
+            if p is not None:
+                alloc.rewrite(ev.tensor, ev.time)
+            else:
+                p = alloc.place(ev.tensor, ev.bits / sample_scale, ev.time,
+                                expected_lifetime_s=window.get(ev.tensor))
+            if ev.kind == "write":
+                if p.offchip:
+                    offchip_j += ev.bits * cfg.dram_pj_per_bit * 1e-12
+                    offchip_bits += ev.bits
+                else:
+                    write_j += ev.bits * cfg.write_pj_per_bit * 1e-12
+                    for b_idx, _ in p.spans:
+                        alloc.banks[b_idx].write_bits += \
+                            ev.bits / max(1, len(p.spans))
+                    _touch(op_write_words, ev.op, p, ev.bits)
+        elif ev.kind == "read":
+            p = alloc.location(ev.tensor)
+            if p is None or p.offchip:
+                offchip_j += ev.bits * cfg.dram_pj_per_bit * 1e-12
+                offchip_bits += ev.bits
+            else:
+                read_j += ev.bits * cfg.read_pj_per_bit * 1e-12
+                for b_idx, _ in p.spans:
+                    alloc.banks[b_idx].read_bits += \
+                        ev.bits / max(1, len(p.spans))
+                _touch(op_read_words, ev.op, p, ev.bits)
+        elif ev.kind == "free":
+            alloc.free(ev.tensor, ev.time)
+
+    for b in alloc.banks:
+        b.finalize(duration_s)
+
+    # bank-conflict stalls: each bank moves one word/cycle/port; an op is
+    # stalled by its most-contended bank beyond its own compute time
+    stall_s = 0.0
+    if op_durations:
+        for table in (op_read_words, op_write_words):
+            for op, per_bank in table.items():
+                if not per_bank:
+                    continue
+                # zero-duration ops are elementwise adds/copies fused into
+                # the producing MAC op's pipeline (Fig 12) — their operands
+                # ride the producer's port slots, no extra stall
+                dur = op_durations.get(op, 0.0)
+                if dur <= 0.0:
+                    continue
+                worst = max(per_bank.values())
+                port_s = port_service_s(worst, freq_hz)
+                extra = max(0.0, port_s - dur)
+                stall_s += extra
+                argmax = max(per_bank, key=per_bank.get)
+                alloc.banks[argmax].stall_s += extra
+
+    decisions = sched.account(alloc.banks, duration_s, freq_hz,
+                              cfg.refresh_pj_per_bit,
+                              lifetime_scale=1.0 / sample_scale)
+    refresh_j = sum(d.refresh_j for d in decisions)
+    refresh_stall = sum(d.stall_s for d in decisions)
+
+    banks = tuple(
+        BankReport(
+            index=b.index, read_bits=b.read_bits, write_bits=b.write_bits,
+            refresh_bits=b.refresh_bits, refresh_count=b.refresh_count,
+            refresh_j=d.refresh_j, stall_s=b.stall_s,
+            peak_words=b.peak_words,
+            peak_occupancy=b.peak_words / geom.words_per_bank,
+            max_resident_lifetime_s=b.max_resident_s / sample_scale,
+            needs_refresh=d.needs_refresh, refreshed=d.refreshed)
+        for b, d in zip(alloc.banks, decisions))
+
+    return ControllerReport(
+        refresh_policy=refresh_policy, alloc_policy=alloc_policy,
+        temp_c=temp_c, duration_s=duration_s, banks=banks,
+        read_j=read_j, write_j=write_j, refresh_j=refresh_j,
+        offchip_j=offchip_j, stall_s=stall_s + refresh_stall,
+        spill_bits=alloc.spill_bits, offchip_bits=offchip_bits,
+        spilled_tensors=tuple(alloc.spilled))

@@ -1,10 +1,11 @@
 """Unit + property tests for 2D BFP quantization (CAMEL §III-E)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
 from repro.core import bfp

@@ -3,11 +3,12 @@
 Shape/dtype sweeps per the kernel-testing contract; hypothesis drives the
 random shape exploration at a modest example count (CPU interpret is slow).
 """
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
 from repro.kernels import ops, ref

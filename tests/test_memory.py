@@ -1,0 +1,232 @@
+"""Bank-level eDRAM memory controller (repro.memory): allocator capacity
+invariants, refresh-policy ordering, trace emission, and cross-validation
+of the trace-driven controller against the scalar edram_energy oracle."""
+import random
+
+import pytest
+
+from repro.core import edram as ed, hwmodel as hw, lifetime as lt, \
+    schedule as sc
+from repro.memory import (Allocator, BankGeometry, RefreshScheduler, replay,
+                          merge_traces)
+
+
+def _blocks(n=6, batch=48, spatial=7, cb=48, ck=160):
+    return lt.duplex_block_specs(n, batch, spatial, cb, ck)
+
+
+def _iteration(temp=60.0, policy="selective", alloc="lifetime", **kw):
+    return hw.iteration(
+        hw.SystemConfig(temp_c=temp, refresh_policy=policy,
+                        alloc_policy=alloc), _blocks(**kw), reversible=True)
+
+
+# ---------------------------------------------------------------- geometry
+
+def test_geometry_matches_capacity():
+    cfg = ed.EDRAMConfig()
+    geom = BankGeometry.from_edram(cfg)
+    assert geom.n_banks == cfg.n_banks
+    assert geom.word_bits == cfg.word_bits
+    # word-quantized capacity never exceeds the scalar capacity
+    assert geom.total_bits <= ed.capacity_bits(cfg)
+    assert geom.total_bits > 0.99 * ed.capacity_bits(cfg)
+    assert geom.words_for(0) == 0
+    assert geom.words_for(1) == 1
+    assert geom.words_for(cfg.word_bits + 1) == 2
+
+
+# --------------------------------------------------------------- allocator
+
+@pytest.mark.parametrize("policy", ["pingpong", "first_fit", "lifetime"])
+def test_allocator_never_exceeds_capacity(policy):
+    cfg = ed.EDRAMConfig()
+    geom = BankGeometry.from_edram(cfg)
+    alloc = Allocator(geom, policy=policy,
+                      retention_s=ed.retention_s(60.0))
+    rng = random.Random(0)
+    live = []
+    for i in range(400):
+        bits = rng.choice([58, 580, 5800, 58000, 580000])
+        life = rng.choice([1e-7, 1e-5, 1e-3])
+        p = alloc.place(f"t{i}", bits, now=i * 1e-6,
+                        expected_lifetime_s=life)
+        assert alloc.used_bits <= ed.capacity_bits(cfg)
+        for b in alloc.banks:
+            assert 0 <= b.used_words <= geom.words_per_bank
+        if not p.offchip:
+            live.append(f"t{i}")
+        if len(live) > 5 and rng.random() < 0.5:
+            alloc.free(live.pop(rng.randrange(len(live))), now=i * 1e-6)
+    # the random churn above must overflow at some point: spills recorded,
+    # never silent over-allocation
+    assert alloc.spill_bits > 0
+    assert alloc.spilled
+
+
+def test_allocator_spills_whole_tensor_when_full():
+    geom = BankGeometry(word_bits=58, words_per_bank=10, n_banks=2)
+    alloc = Allocator(geom, policy="first_fit")
+    alloc.place("big", 58 * 15, now=0.0)          # 15 of 20 words
+    p = alloc.place("too_big", 58 * 8, now=0.0)   # needs 8, only 5 free
+    assert p.offchip
+    assert alloc.used_bits == 58 * 15
+    alloc.free("big", now=1.0)
+    assert alloc.used_bits == 0
+
+
+def test_pingpong_rotates_and_stripes():
+    geom = BankGeometry(word_bits=58, words_per_bank=100, n_banks=4)
+    alloc = Allocator(geom, policy="pingpong")
+    p1 = alloc.place("a", 58 * 8, now=0.0)
+    p2 = alloc.place("b", 58 * 8, now=0.0)
+    # striped across all banks, successive tensors start on rotated banks
+    assert len(p1.spans) == 4 and len(p2.spans) == 4
+    assert p1.spans[0][0] != p2.spans[0][0]
+
+
+def test_lifetime_policy_confines_long_lived_tensors():
+    ret = 1e-6
+    geom = BankGeometry(word_bits=58, words_per_bank=100, n_banks=4)
+    alloc = Allocator(geom, policy="lifetime", retention_s=ret)
+    alloc.place("short", 58 * 8, now=0.0, expected_lifetime_s=ret / 10)
+    p_long = alloc.place("long", 58 * 8, now=0.0, expected_lifetime_s=ret * 10)
+    # long-lived data is packed densely, not striped everywhere
+    assert len(p_long.spans) == 1
+    p_short2 = alloc.place("short2", 58 * 8, now=0.0,
+                           expected_lifetime_s=ret / 10)
+    assert p_long.spans[0][0] not in [i for i, _ in p_short2.spans]
+
+
+# ----------------------------------------------------------------- refresh
+
+def test_refresh_policy_validation():
+    with pytest.raises(ValueError):
+        RefreshScheduler("sometimes", temp_c=60.0)
+    with pytest.raises(ValueError):
+        Allocator(BankGeometry(58, 10, 2), policy="best_fit")
+
+
+def test_refresh_interval_is_temperature_adaptive():
+    hot = RefreshScheduler("always", temp_c=100.0)
+    cold = RefreshScheduler("always", temp_c=-30.0)
+    assert hot.interval_s < cold.interval_s
+    assert hot.interval_s == pytest.approx(ed.refresh_interval_s(100.0))
+
+
+@pytest.mark.parametrize("temp", [60.0, 100.0])
+@pytest.mark.parametrize("alloc", ["pingpong", "first_fit", "lifetime"])
+def test_selective_between_none_and_always(temp, alloc):
+    """ISSUE invariant: none ≤ selective ≤ always refresh energy."""
+    reps = {pol: _iteration(temp=temp, policy=pol, alloc=alloc)
+            for pol in ("none", "selective", "always")}
+    r_none = reps["none"].controller.refresh_j
+    r_sel = reps["selective"].controller.refresh_j
+    r_alw = reps["always"].controller.refresh_j
+    assert r_none == 0.0
+    assert r_none <= r_sel <= r_alw
+    assert r_alw > 0.0                     # data is resident ⇒ always pays
+
+
+def test_selective_never_skips_over_retention_banks():
+    """No silent data loss: every bank whose resident lifetime exceeds
+    retention is refreshed under selective (and always)."""
+    for alloc in ("pingpong", "first_fit", "lifetime"):
+        rep = _iteration(temp=100.0, policy="selective", alloc=alloc)
+        assert rep.controller.safe
+        assert all(b.refreshed for b in rep.controller.banks
+                   if b.needs_refresh)
+
+
+def test_lifetime_coloring_beats_pingpong_on_selective_refresh():
+    """Mixed-lifetime residency: coloring confines over-retention tensors
+    to few banks, so selective refresh gets strictly cheaper."""
+    sel_color = _iteration(temp=100.0, policy="selective", alloc="lifetime")
+    sel_pp = _iteration(temp=100.0, policy="selective", alloc="pingpong")
+    c, p = sel_color.controller, sel_pp.controller
+    assert sum(b.refreshed for b in c.banks) <= sum(
+        b.refreshed for b in p.banks)
+    assert c.refresh_j <= p.refresh_j
+
+
+# ------------------------------------------------------ trace + controller
+
+def test_schedule_emits_consistent_trace():
+    blocks = _blocks(3)
+    fwd, bwd = sc.simulate_training_iteration(blocks, 1e12)
+    for sim in (fwd, bwd):
+        assert sim.trace, "simulate() must emit trace events"
+        read = sum(e.bits for e in sim.trace if e.kind == "read")
+        write = sum(e.bits for e in sim.trace if e.kind == "write")
+        assert read == pytest.approx(sim.read_bits)
+        assert write == pytest.approx(sim.write_bits)
+        assert all(e.time >= 0 for e in sim.trace)
+        # frees never precede the tensor's first event
+        seen = set()
+        for e in sim.trace:
+            if e.kind == "free":
+                assert e.tensor in seen
+            seen.add(e.tensor)
+
+
+def test_merge_traces_offsets_backward_timeline():
+    blocks = _blocks(2)
+    fwd, bwd = sc.simulate_training_iteration(blocks, 1e12)
+    events, durations, total = merge_traces(fwd, bwd)
+    assert total == pytest.approx(fwd.total_time + bwd.total_time)
+    bwd_events = events[len(fwd.trace):]
+    assert all(e.time >= fwd.total_time - 1e-18 for e in bwd_events)
+    assert set(durations) >= {n for n, _, _ in fwd.schedule}
+
+
+def test_controller_matches_scalar_oracle_within_5pct():
+    """Replayed totals vs the scalar edram_energy oracle on the seed DuDNN
+    block configs (refresh-free operating point)."""
+    for nb, batch, cb, ck in [(6, 48, 48, 160), (4, 48, 32, 64),
+                              (6, 1, 32, 64)]:
+        rep = hw.iteration(hw.SystemConfig(temp_c=60.0),
+                           _blocks(nb, batch, 7, cb, ck), reversible=True)
+        assert rep.controller is not None
+        assert rep.scalar_memory_j > 0
+        err = abs(rep.memory_j - rep.scalar_memory_j) / rep.scalar_memory_j
+        assert err < 0.05, (rep.memory_j, rep.scalar_memory_j)
+
+
+def test_controller_read_write_bits_match_schedule():
+    blocks = _blocks(4)
+    rep = hw.iteration(hw.SystemConfig(), blocks, reversible=True)
+    c = rep.controller
+    fwd, bwd = sc.simulate_training_iteration(
+        blocks, lt.array_throughput(6, 500e6,
+                                    [s for b in blocks
+                                     for s in (b.f1, b.f2, b.g)]),
+        hw.BFP_BITS)
+    total_read = fwd.read_bits + bwd.read_bits
+    onchip_read = sum(b.read_bits for b in c.banks)
+    assert onchip_read + c.offchip_bits >= 0
+    assert onchip_read <= total_read + 1e-6
+    # no spills on seed configs: all traffic stays on-chip
+    assert c.spill_bits == 0
+    assert onchip_read == pytest.approx(total_read)
+
+
+def test_first_fit_stalls_at_least_as_much_as_striping():
+    """Dense packing serializes port traffic; striping spreads it."""
+    dense = _iteration(alloc="first_fit").controller
+    striped = _iteration(alloc="pingpong").controller
+    assert dense.stall_s >= striped.stall_s
+
+
+def test_offchip_bw_is_configurable():
+    """Satellite: the magic 34e9 became SystemConfig.offchip_bw_bps."""
+    blocks = _blocks()
+    slow = hw.iteration(hw.SystemConfig(
+        name="SRAM-only", array=4, use_edram=False,
+        onchip_bits=4 * 48 * 1024 * 8, offchip_bw_bps=1e9),
+        blocks, reversible=False)
+    fast = hw.iteration(hw.SystemConfig(
+        name="SRAM-only", array=4, use_edram=False,
+        onchip_bits=4 * 48 * 1024 * 8, offchip_bw_bps=1e12),
+        blocks, reversible=False)
+    assert slow.offchip_bits == fast.offchip_bits > 0
+    assert slow.latency_s > fast.latency_s
