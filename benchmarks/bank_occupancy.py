@@ -2,14 +2,16 @@
 and the selective-vs-always refresh energy delta (CAMEL §V, Figs 17/23/24)
 across the Table III array sizes.
 
-Each row replays the trace of one training iteration of the seed DuDNN
-config (B6 + ResNet-50-scale backbone, batch 48) through ``repro.memory``
-and cross-validates the controller totals against the scalar
-``edram_energy`` oracle at the refresh-free operating point.
+Each row simulates one training iteration of a seed DuDNN config
+(B6 + ResNet-50-scale backbone, batch 48) through the ``repro.sim``
+pipeline — the trace replays through ``repro.memory`` — and
+cross-validates the controller totals against the scalar ``edram_energy``
+oracle at the refresh-free operating point.
 """
 from __future__ import annotations
 
-from repro.core import hwmodel as hw, lifetime as lt
+from repro import sim
+from repro.core import hwmodel as hw
 
 # seed DuDNN block configs (Table III / Fig 23-24 scale)
 CONFIGS = [
@@ -20,52 +22,73 @@ ARRAYS = (6, 10, 12)           # Table III sweep
 TEMPS = (60.0, 100.0)          # refresh-free point + mixed-lifetime point
 
 
-def _controller(cfg: hw.SystemConfig, blocks) -> hw.IterationReport:
-    return hw.iteration(cfg, blocks, reversible=True)
+def _arm(label: str, workload: sim.WorkloadSpec, **system) -> sim.Arm:
+    return sim.Arm(name=label, system=hw.SystemConfig(**system),
+                   workload=workload, reversible=True, iters_to_target=None)
 
 
-def run() -> list[str]:
-    rows = []
+def run() -> list:
+    rows: list = []
     for label, nb, batch, cb, ck in CONFIGS:
-        blocks = lt.duplex_block_specs(nb, batch=batch, spatial=7,
-                                       c_branch=cb, c_backbone=ck)
+        wl = sim.WorkloadSpec(n_blocks=nb, batch=batch, spatial=7,
+                              c_branch=cb, c_backbone=ck)
         for array in ARRAYS:
             for temp in TEMPS:
-                per_policy = {}
-                for pol in ("none", "selective", "always"):
-                    rep = _controller(
-                        hw.SystemConfig(array=array, temp_c=temp,
-                                        refresh_policy=pol,
-                                        alloc_policy="lifetime"), blocks)
-                    per_policy[pol] = rep
-                sel = per_policy["selective"].controller
-                alw = per_policy["always"].controller
-                non = per_policy["none"].controller
-                occ = [b.peak_occupancy for b in sel.banks]
-                needs = sum(1 for b in sel.banks if b.needs_refresh)
-                refreshed = sum(1 for b in sel.banks if b.refreshed)
-                delta = alw.refresh_j - sel.refresh_j
-                rows.append(
-                    f"bank_occupancy/{label}/a{array}/T{temp:.0f},"
-                    f"{per_policy['selective'].latency_s*1e6:.1f},"
-                    f"occ_min={min(occ):.2f};occ_max={max(occ):.2f};"
-                    f"needs_refresh={needs}/12;refreshed={refreshed};"
-                    f"refresh_count={sel.refresh_count};"
-                    f"sel_refresh_j={sel.refresh_j:.3e};"
-                    f"always_refresh_j={alw.refresh_j:.3e};"
-                    f"delta_j={delta:.3e};"
-                    f"sel_lt_always={sel.refresh_j < alw.refresh_j};"
-                    f"sel_ge_none={sel.refresh_j >= non.refresh_j};"
-                    f"safe={sel.safe}")
+                per_policy = {
+                    pol: sim.run(_arm(label, wl, array=array, temp_c=temp,
+                                      refresh_policy=pol,
+                                      alloc_policy="lifetime"))
+                    for pol in ("none", "selective", "always")}
+                sel = per_policy["selective"].memory
+                alw = per_policy["always"].memory
+                non = per_policy["none"].memory
+                banks = sel["banks"]
+                occ = [b["peak_occupancy"] for b in banks]
+                needs = sum(1 for b in banks if b["needs_refresh"])
+                refreshed = sum(1 for b in banks if b["refreshed"])
+                delta = alw["refresh_j"] - sel["refresh_j"]
+                rows.append({
+                    "row": (
+                        f"bank_occupancy/{label}/a{array}/T{temp:.0f},"
+                        f"{per_policy['selective'].latency_s*1e6:.1f},"
+                        f"occ_min={min(occ):.2f};occ_max={max(occ):.2f};"
+                        f"needs_refresh={needs}/12;refreshed={refreshed};"
+                        f"refresh_count={sel['refresh_count']};"
+                        f"sel_refresh_j={sel['refresh_j']:.3e};"
+                        f"always_refresh_j={alw['refresh_j']:.3e};"
+                        f"delta_j={delta:.3e};"
+                        f"sel_lt_always={sel['refresh_j'] < alw['refresh_j']};"
+                        f"sel_ge_none={sel['refresh_j'] >= non['refresh_j']};"
+                        f"safe={sel['safe']}"),
+                    "arm": label,
+                    "config": per_policy["selective"].config,
+                })
         # oracle cross-validation at the refresh-free point: the replayed
         # totals must match the scalar edram_energy arithmetic within 5%
-        rep = _controller(hw.SystemConfig(temp_c=60.0), blocks)
-        ctrl_j = rep.memory_j
-        oracle_j = rep.scalar_memory_j
-        err = abs(ctrl_j - oracle_j) / max(oracle_j, 1e-30)
-        rows.append(f"bank_occupancy/{label}/oracle,0,"
-                    f"controller_j={ctrl_j:.4e};scalar_j={oracle_j:.4e};"
-                    f"rel_err={err:.4f};within_5pct={err < 0.05}")
+        rep = sim.run(_arm(label, wl, temp_c=60.0))
+        rows.append({
+            "row": (f"bank_occupancy/{label}/oracle,0,"
+                    f"controller_j={rep.memory_j:.4e};"
+                    f"scalar_j={rep.scalar_memory_j:.4e};"
+                    f"rel_err={rep.oracle_rel_err:.4f};"
+                    f"within_5pct={rep.oracle_rel_err < 0.05}"),
+            "arm": label,
+            "config": rep.config,
+        })
+    # the FR/SRAM arm replays through the same controller now; assert its
+    # oracle too (ROADMAP "irreversible arm still scalar" follow-up closed)
+    fr = sim.run(sim.get_arm("FR+SRAM").with_workload(
+        n_blocks=6, batch=48, spatial=7, c_branch=48, c_backbone=160))
+    rows.append({
+        "row": (f"bank_occupancy/FR+SRAM/oracle,0,"
+                f"controller_j={fr.memory_j:.4e};"
+                f"scalar_j={fr.scalar_memory_j:.4e};"
+                f"rel_err={fr.oracle_rel_err:.4f};"
+                f"within_5pct={fr.oracle_rel_err < 0.05};"
+                f"offchip_kib={fr.offchip_bits/8/1024:.0f}"),
+        "arm": "FR+SRAM",
+        "config": fr.config,
+    })
     rows.append("bank_occupancy/claim,0,"
                 "paper=selective refresh skips refresh-free banks (Fig 23) "
                 "and beats always-refresh energy (Fig 24)")
@@ -73,4 +96,5 @@ def run() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    for r in run():
+        print(r["row"] if isinstance(r, dict) else r)

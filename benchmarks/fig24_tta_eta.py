@@ -1,4 +1,7 @@
-"""Fig 24: TTA/ETA of the four system arms across DNN scales.
+"""Fig 24: TTA/ETA of the four system arms across DNN scales, via the
+``repro.sim`` arm registry — every arm (including FR/SRAM) replays through
+the bank-level memory controller, with the scalar closed forms as a
+cross-validation oracle.
 
 Iteration counts encode the convergence behaviour measured in
 benchmarks/table2 at small scale (CA needs ~2.5× the iterations to the
@@ -6,7 +9,7 @@ target; BO does not reach it — the paper drops those bars too).
 """
 from __future__ import annotations
 
-from repro.core import hwmodel as hw, lifetime as lt
+from repro import sim
 
 # (label, branch blocks, branch ch, backbone ch) ~ paper's B-x + ResNet-y
 ARCHS = [
@@ -15,31 +18,38 @@ ARCHS = [
     ("B6+R50", 6, 48, 160),
     ("B6+VGG16", 6, 48, 128),
 ]
-ITERS_TARGET = 1000            # iterations for DuDNN/FR to hit the target
-ITERS_CHAIN = 2500             # CA's inferior convergence (§VI-F)
 
 
-def run() -> list[str]:
-    rows = []
+def run() -> list:
+    rows: list = []
     for label, nb, cb, ck in ARCHS:
-        blocks = lt.duplex_block_specs(nb, batch=48, spatial=7,
-                                       c_branch=cb, c_backbone=ck)
-        camel = hw.tta_eta(hw.SystemConfig(), blocks, ITERS_TARGET,
-                           reversible=True)
-        fr = hw.tta_eta(hw.SRAM_ONLY, blocks, ITERS_TARGET,
-                        reversible=False)
-        ca = hw.tta_eta(hw.SystemConfig(), blocks, ITERS_CHAIN,
-                        reversible=True)
-        tta_x = fr["tta_s"] / camel["tta_s"]
-        eta_x = fr["eta_j"] / camel["eta_j"]
+        wl = dict(n_blocks=nb, batch=48, spatial=7,
+                  c_branch=cb, c_backbone=ck)
+        reports = {name: sim.run(sim.get_arm(name).with_workload(**wl))
+                   for name in ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL",
+                                "BO+CAMEL")}
+        camel, fr, ca = (reports["DuDNN+CAMEL"], reports["FR+SRAM"],
+                         reports["CA+CAMEL"])
+        for name, rep in reports.items():
+            tta = f"{rep.tta_s:.4e}" if rep.tta_s else "unreached"
+            rows.append({
+                "row": (f"fig24/{label}/{name},{rep.latency_s*1e6:.1f},"
+                        f"energy_j={rep.energy_j:.4e};tta_s={tta};"
+                        f"oracle_err={rep.oracle_rel_err:.4f};"
+                        f"refresh_free={rep.refresh_free}"),
+                "arm": name,
+                "config": rep.config,
+            })
         rows.append(
-            f"fig24/{label},{camel['iteration'].latency_s*1e6:.1f},"
-            f"TTAxFR={tta_x:.2f};ETAxFR={eta_x:.2f};"
-            f"ETAxCA={ca['eta_j']/camel['eta_j']:.2f};"
-            f"refresh_free={camel['iteration'].refresh_free}")
+            f"fig24/{label},{camel.latency_s*1e6:.1f},"
+            f"TTAxFR={fr.tta_s / camel.tta_s:.2f};"
+            f"ETAxFR={fr.eta_j / camel.eta_j:.2f};"
+            f"ETAxCA={ca.eta_j / camel.eta_j:.2f};"
+            f"refresh_free={camel.refresh_free}")
     rows.append("fig24/claim,0,paper=DuDNN+CAMEL best TTA & >=2x ETA")
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    for r in run():
+        print(r["row"] if isinstance(r, dict) else r)

@@ -3,10 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (from the
 multi-pod dry-run artifacts) is appended when ``experiments/dryrun`` exists.
 ``--json PATH`` additionally writes the rows as machine-readable records
-({"name", "us_per_call", "derived"}) for perf-trajectory tracking.
+({"name", "us_per_call", "derived", "suite", ...}) for perf-trajectory
+tracking; suites that simulate a system arm attach the arm name and its
+fully resolved config (``repro.sim.ArmReport.config``), so each record is
+self-describing.  ``--list`` prints the registered suites.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
-                                            [--json out.json]
+                                            [--json out.json] [--list]
 """
 from __future__ import annotations
 
@@ -33,14 +36,22 @@ SUITES = {
 SLOW = {"table2", "fig21", "bfp"}       # these train models on CPU
 
 
-def _row_record(row: str) -> dict:
+def _row_record(row, suite: str = "") -> dict:
+    """A suite row — either a bare CSV string or a dict carrying the CSV
+    under "row" plus extra record fields (arm name, resolved config) —
+    as one JSON record."""
+    extras = {}
+    if isinstance(row, dict):
+        extras = {k: v for k, v in row.items() if k != "row"}
+        row = row["row"]
     parts = row.split(",", 2) + ["", ""]          # tolerate short rows
     name, us, derived = parts[0], parts[1], parts[2]
     try:
         us_val: float = float(us)
     except ValueError:
         us_val = 0.0
-    return {"name": name, "us_per_call": us_val, "derived": derived}
+    return {"name": name, "us_per_call": us_val, "derived": derived,
+            "suite": suite, **extras}
 
 
 def _roofline_rows() -> list[str]:
@@ -69,20 +80,30 @@ def main() -> None:
     ap.add_argument("--skip-slow", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON records to PATH")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suites and exit")
     args = ap.parse_args()
+
+    if args.list:
+        for name in (*SUITES, "roofline"):
+            slow = " (slow)" if name in SLOW else ""
+            print(f"{name}{slow}")
+        return
 
     names = list(SUITES) if not args.only else args.only.split(",")
     failures = 0
     records = []
+    suite = ""
 
-    def emit(row: str) -> None:
-        print(row)
-        records.append(_row_record(row))
+    def emit(row) -> None:
+        records.append(_row_record(row, suite=suite))
+        print(row["row"] if isinstance(row, dict) else row)
 
     print("name,us_per_call,derived")
     for name in names:
         if name == "roofline":
             continue
+        suite = name
         if args.skip_slow and name in SLOW:
             emit(f"{name}/skipped,0,--skip-slow")
             continue
@@ -97,6 +118,7 @@ def main() -> None:
             emit(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},"
                  f"ERROR:{type(e).__name__}")
     if args.only is None or "roofline" in args.only:
+        suite = "roofline"
         for row in _roofline_rows():
             emit(row)
     if args.json:

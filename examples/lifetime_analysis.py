@@ -1,12 +1,14 @@
 """CAMEL co-design analysis for a DuDNN configuration: per-layer data
 lifetimes (eqs 3-10), the schedule simulation, the eDRAM refresh-free
-verdict across temperature, and the TTA/ETA projection.
+verdict across temperature, and the TTA/ETA projection — the system-level
+numbers come from the ``repro.sim`` arm/pipeline API.
 
     PYTHONPATH=src python examples/lifetime_analysis.py --blocks 6 --array 6
 """
 import argparse
 
-from repro.core import edram as ed, hwmodel as hw, lifetime as lt, schedule as sc
+from repro import sim
+from repro.core import edram as ed, lifetime as lt, schedule as sc
 
 
 def main():
@@ -40,8 +42,10 @@ def main():
           f"bwd peak live {bsim.peak_live_bits/8/1024:.1f} KiB "
           f"(eDRAM capacity {ed.capacity_bits(ed.EDRAMConfig())/8/1024:.0f} KiB)")
 
-    rep = hw.iteration(hw.SystemConfig(array=args.array, temp_c=args.temp),
-                       blocks, reversible=True)
+    wl = dict(n_blocks=args.blocks, batch=args.batch, spatial=args.spatial,
+              c_branch=args.branch_ch, c_backbone=args.backbone_ch)
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL").with_workload(**wl)
+                  .with_system(array=args.array, temp_c=args.temp))
     ret = ed.retention_s(args.temp)
     print(f"\nmax lifetime {rep.max_lifetime_s*1e6:.3f} µs vs retention "
           f"{ret*1e6:.2f} µs @ {args.temp:.0f} °C → refresh-free: "
@@ -51,7 +55,7 @@ def main():
           f"{rep.energy_j*1e6:.1f} µJ "
           f"(compute {rep.compute_j*1e6:.1f} / memory {rep.memory_j*1e6:.1f})")
 
-    sram = hw.iteration(hw.SRAM_ONLY, blocks, reversible=False)
+    sram = sim.run(sim.get_arm("FR+SRAM").with_workload(**wl))
     print(f"SRAM-only baseline: {sram.latency_s*1e3:.3f} ms, "
           f"{sram.energy_j*1e6:.1f} µJ, off-chip "
           f"{sram.offchip_bits/8/1024:.0f} KiB/iter "

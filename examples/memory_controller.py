@@ -1,13 +1,16 @@
 """Drive the bank-level eDRAM memory controller over one DuDNN training
-iteration: per-bank occupancy, residency lifetimes vs retention, refresh
-policy comparison, and the energy cross-check against the scalar model.
+iteration via the ``repro.sim`` arm/pipeline API: per-bank occupancy,
+residency lifetimes vs retention, refresh policy comparison, the energy
+cross-check against the scalar model, and the FR/SRAM baseline replayed
+through the same controller.
 
     PYTHONPATH=src python examples/memory_controller.py --temp 100 \
         --alloc lifetime
 """
 import argparse
 
-from repro.core import edram as ed, hwmodel as hw, lifetime as lt
+from repro import sim
+from repro.core import edram as ed, hwmodel as hw
 
 
 def main():
@@ -22,43 +25,61 @@ def main():
                     choices=("pingpong", "first_fit", "lifetime"))
     args = ap.parse_args()
 
-    blocks = lt.duplex_block_specs(args.blocks, args.batch, 7,
-                                   args.branch_ch, args.backbone_ch)
+    wl = sim.WorkloadSpec(n_blocks=args.blocks, batch=args.batch, spatial=7,
+                          c_branch=args.branch_ch,
+                          c_backbone=args.backbone_ch)
     ret = ed.retention_s(args.temp)
     print(f"retention @ {args.temp:.0f}°C: {ret*1e6:.2f} µs\n")
 
     reports = {}
     for pol in ("none", "selective", "always"):
-        cfg = hw.SystemConfig(array=args.array, temp_c=args.temp,
-                              refresh_policy=pol, alloc_policy=args.alloc)
-        reports[pol] = hw.iteration(cfg, blocks, reversible=True)
+        arm = sim.Arm(name=f"DuDNN+CAMEL/{pol}",
+                      system=hw.SystemConfig(array=args.array,
+                                             temp_c=args.temp,
+                                             refresh_policy=pol,
+                                             alloc_policy=args.alloc),
+                      workload=wl, reversible=True, iters_to_target=None)
+        reports[pol] = sim.run(arm)
 
-    c = reports["selective"].controller
+    c = reports["selective"].memory
     print(f"bank state under alloc={args.alloc!r}, policy='selective':")
     print(f"{'bank':>4} {'peak occ':>9} {'reads(kb)':>10} {'writes(kb)':>10} "
           f"{'max res(µs)':>12} {'needs?':>6} {'refreshed':>9} {'pulses':>6}")
-    for b in c.banks:
-        print(f"{b.index:>4} {b.peak_occupancy:>9.2f} "
-              f"{b.read_bits/1e3:>10.1f} {b.write_bits/1e3:>10.1f} "
-              f"{b.max_resident_lifetime_s*1e6:>12.3f} "
-              f"{str(b.needs_refresh):>6} {str(b.refreshed):>9} "
-              f"{b.refresh_count:>6}")
+    for b in c["banks"]:
+        print(f"{b['index']:>4} {b['peak_occupancy']:>9.2f} "
+              f"{b['read_bits']/1e3:>10.1f} {b['write_bits']/1e3:>10.1f} "
+              f"{b['max_resident_lifetime_s']*1e6:>12.3f} "
+              f"{str(b['needs_refresh']):>6} {str(b['refreshed']):>9} "
+              f"{b['refresh_count']:>6}")
 
     print("\nrefresh policy comparison (one iteration):")
     for pol, rep in reports.items():
-        cc = rep.controller
-        print(f"  {pol:>9}: refresh={cc.refresh_j*1e9:9.2f} nJ  "
+        m = rep.memory
+        print(f"  {pol:>9}: refresh={m['refresh_j']*1e9:9.2f} nJ "
+              f"(read {m['refresh_read_j']*1e9:.2f} / "
+              f"restore {m['refresh_restore_j']*1e9:.2f})  "
               f"memory={rep.memory_j*1e6:8.3f} µJ  "
-              f"stall={rep.stall_s*1e6:7.1f} µs  safe={cc.safe}")
+              f"stall={rep.stall_s*1e6:7.1f} µs  safe={m['safe']}")
 
     rep = reports["selective"]
     if rep.scalar_memory_j > 0:
-        err = abs(rep.memory_j - rep.scalar_memory_j) / rep.scalar_memory_j
         print(f"\nscalar-oracle cross-check: controller "
               f"{rep.memory_j*1e6:.3f} µJ vs scalar "
-              f"{rep.scalar_memory_j*1e6:.3f} µJ (rel err {err:.1%})")
-    if c.spilled_tensors:
-        print(f"spilled off-chip: {', '.join(c.spilled_tensors)}")
+              f"{rep.scalar_memory_j*1e6:.3f} µJ "
+              f"(rel err {rep.oracle_rel_err:.1%})")
+    if rep.memory["spilled"]:
+        print(f"spilled off-chip: {', '.join(rep.memory['spilled'])}")
+
+    # the irreversible baseline replays through the same controller: its
+    # whole-iteration activation buffers spill one store + one load each
+    fr = sim.run(sim.get_arm("FR+SRAM").with_workload(
+        n_blocks=args.blocks, batch=args.batch, spatial=7,
+        c_branch=args.branch_ch, c_backbone=args.backbone_ch))
+    print(f"\nFR+SRAM baseline through the controller: "
+          f"memory={fr.memory_j*1e6:.3f} µJ, "
+          f"off-chip {fr.offchip_bits/8/1024:.0f} KiB/iter, "
+          f"{len(fr.memory['spilled'])} buffers spilled, "
+          f"oracle rel err {fr.oracle_rel_err:.1%}")
 
 
 if __name__ == "__main__":

@@ -36,7 +36,16 @@ class EDRAMConfig:
     # than 6T SRAM at iso-node, writes comparable)
     read_pj_per_bit: float = 0.013
     write_pj_per_bit: float = 0.017
-    refresh_pj_per_bit: float = 0.020    # read + restore
+    # a refresh pulse is a read (sense the droop) plus a restore (drive the
+    # write bitline back to full level).  ``refresh_pj_per_bit`` is the
+    # legacy aggregate; set the two split fields to model them separately
+    # (sensitivity studies) — when only one is given the other is the
+    # remainder of the aggregate, when neither is given the aggregate is
+    # split 0.4/0.6 (read port vs the costlier write-back, mirroring the
+    # read/write pJ ratio above).
+    refresh_pj_per_bit: float = 0.020    # read + restore (aggregate)
+    refresh_read_pj_per_bit: float | None = None
+    refresh_restore_pj_per_bit: float | None = None
     leakage_mw_per_kb: float = 0.004     # no cross-coupled inverters
 
     # SRAM comparison points (6T, same node)
@@ -48,6 +57,32 @@ class EDRAMConfig:
     # off-chip DRAM (the SRAM-only baseline's second tier; LPDDR5-class —
     # see EXPERIMENTS.md for the sensitivity of the Fig 24 ratio to this)
     dram_pj_per_bit: float = 2.0
+
+    @property
+    def refresh_read_pj(self) -> float:
+        """Resolved read-phase refresh energy (pJ/bit)."""
+        if self.refresh_read_pj_per_bit is not None:
+            return self.refresh_read_pj_per_bit
+        if self.refresh_restore_pj_per_bit is not None:
+            return max(0.0,
+                       self.refresh_pj_per_bit - self.refresh_restore_pj_per_bit)
+        return 0.4 * self.refresh_pj_per_bit
+
+    @property
+    def refresh_restore_pj(self) -> float:
+        """Resolved restore-phase refresh energy (pJ/bit)."""
+        if self.refresh_restore_pj_per_bit is not None:
+            return self.refresh_restore_pj_per_bit
+        if self.refresh_read_pj_per_bit is not None:
+            return max(0.0,
+                       self.refresh_pj_per_bit - self.refresh_read_pj_per_bit)
+        return 0.6 * self.refresh_pj_per_bit
+
+    @property
+    def refresh_total_pj(self) -> float:
+        """Read + restore pJ/bit; equals ``refresh_pj_per_bit`` unless the
+        split fields override it."""
+        return self.refresh_read_pj + self.refresh_restore_pj
 
 
 def retention_s(temp_c: float) -> float:
@@ -94,7 +129,7 @@ def edram_energy(cfg: EDRAMConfig, read_bits: float, write_bits: float,
     refresh_j = 0.0
     if needs_refresh:
         n_refresh = duration_s / refresh_interval_s(temp_c)
-        refresh_j = stored_bits * cfg.refresh_pj_per_bit * 1e-12 * n_refresh
+        refresh_j = stored_bits * cfg.refresh_total_pj * 1e-12 * n_refresh
     return MemoryEnergy(
         read_j=read_bits * cfg.read_pj_per_bit * 1e-12,
         write_j=write_bits * cfg.write_pj_per_bit * 1e-12,

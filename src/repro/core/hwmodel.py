@@ -12,16 +12,23 @@ and TTA/ETA comparisons across the paper's four system arms (Fig 24):
 The hardware constants live in ``EDRAMConfig`` / here; iteration *counts*
 come from measured convergence (benchmarks/table2) or the paper's relative
 convergence behaviour when a full training run is out of scope.
+
+.. deprecated::
+    The simulation entry points moved to ``repro.sim`` — a staged pipeline
+    behind ``sim.run(arm)`` that routes *every* arm (including FR/SRAM)
+    through the trace-driven memory controller.  ``iteration()`` /
+    ``tta_eta()`` / ``SRAM_ONLY`` remain as thin shims that emit
+    ``DeprecationWarning`` and delegate; ``SystemConfig`` stays canonical
+    here.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 from repro.core import edram as ed
-from repro.core.lifetime import DuBlockSpec, array_throughput
-from repro.core.schedule import simulate_training_iteration
-from repro.memory import trace as mtr
+from repro.core.lifetime import DuBlockSpec
 
 BFP_BITS = 58 / 9          # §III-E: 6.44 bits/value
 FP16_BITS = 16.0
@@ -45,13 +52,26 @@ class SystemConfig:
     use_controller: bool = True
     refresh_policy: str = "selective"   # always | none | selective
     alloc_policy: str = "pingpong"      # pingpong | first_fit | lifetime
+    # bank count the controller splits ``onchip_bits`` into when
+    # ``use_edram=False`` (the paper's 4×48KB activation SRAMs)
+    sram_banks: int = 4
 
 
-SRAM_ONLY = SystemConfig(
+_SRAM_ONLY = SystemConfig(
     name="SRAM-only", array=4,      # §VI-F: same area ⇒ smaller array
     use_edram=False,
     onchip_bits=4 * 48 * 1024 * 8,  # 4×48KB activation SRAMs
 )
+
+
+def __getattr__(name: str):
+    if name == "SRAM_ONLY":
+        warnings.warn(
+            "core.hwmodel.SRAM_ONLY is deprecated; use "
+            "repro.sim.get_arm('FR+SRAM').system",
+            DeprecationWarning, stacklevel=2)
+        return _SRAM_ONLY
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,97 +91,53 @@ class IterationReport:
     stall_s: float = 0.0
 
 
+def _iteration(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
+               reversible: bool = True) -> IterationReport:
+    """Delegate to the ``repro.sim`` pipeline; repackage as the legacy
+    :class:`IterationReport` (no warning — the shims share this path)."""
+    from repro import sim          # late import: sim imports this module
+    rep = sim.run(sim.Arm(name=cfg.name, system=cfg, reversible=reversible,
+                          workload=None, blocks=tuple(blocks),
+                          iters_to_target=None))
+    return IterationReport(
+        latency_s=rep.latency_s,
+        energy_j=rep.energy_j,
+        compute_j=rep.compute_j,
+        memory_j=rep.memory_j,
+        max_lifetime_s=rep.max_lifetime_s,
+        refresh_free=rep.refresh_free,
+        peak_live_bits=rep.peak_live_bits,
+        offchip_bits=rep.offchip_bits,
+        controller=rep.controller,
+        scalar_memory_j=rep.scalar_memory_j,
+        stall_s=rep.stall_s,
+    )
+
+
 def iteration(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
               reversible: bool = True) -> IterationReport:
     """Latency + energy of one training iteration on ``cfg``.
 
-    ``reversible=False`` models the FI/FR arm: all forward activations are
-    buffered for the whole iteration (lifetime = iteration time) and any
-    overflow beyond on-chip capacity spills off-chip (twice: store + load).
+    .. deprecated:: use ``repro.sim.run(sim.Arm(...))`` — same numbers,
+       structured ``ArmReport``, and every arm through the controller.
     """
-    bits = BFP_BITS if cfg.use_edram else FP16_BITS
-    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
-    R = array_throughput(cfg.array, cfg.freq_hz, specs, cfg.bfp_group)
-    fwd, bwd = simulate_training_iteration(blocks, R, bits)
-    total_time = fwd.total_time + bwd.total_time
-    # gradient ops (U1a/U1w/U2a/U2w); the reversible arm also pays the
-    # eq-2 input recompute (the paper's accepted overhead, §III)
-    macs = sum(s.macs for s in specs) + sum(
-        b.f1.macs_out * 2 + b.f2.macs_out * 2 for b in blocks)
-    if reversible:
-        macs += sum(b.f1.macs_out + b.f2.macs_out for b in blocks)
-
-    # weight-stationary dataflow streams the mini-batch sample-by-sample
-    # (Fig 17a): a tensor's eDRAM lifetime is its PER-SAMPLE producer→consumer
-    # distance, not the whole-batch op time (this is how the paper fits
-    # batch-48 training under a 3.4 µs retention, Fig 23a).
-    batch = max(blocks[0].f1.batch, 1)
-
-    read_bits = fwd.read_bits + bwd.read_bits
-    write_bits = fwd.write_bits + bwd.write_bits
-    if reversible:
-        max_life = max(fwd.max_lifetime, bwd.max_lifetime) / batch
-        stored = max(fwd.peak_live_bits, bwd.peak_live_bits)
-        offchip = 0.0
-    else:
-        # irreversible: every block's activations live until backward
-        per_layer = [b.f1.batch * b.f1.c_out * b.f1.width * b.f1.height * bits
-                     * 2 for b in blocks]
-        stored = max(fwd.peak_live_bits, bwd.peak_live_bits) + sum(per_layer)
-        max_life = total_time / batch
-        offchip = max(0.0, stored - cfg.onchip_bits) * 2
-
-    controller = None
-    stall_s = 0.0
-    scalar_memory_j = 0.0
-    if cfg.use_edram:
-        rf = ed.refresh_free(max_life, cfg.temp_c)
-        mem = ed.edram_energy(cfg.edram, read_bits, write_bits, stored,
-                              total_time, cfg.temp_c, needs_refresh=not rf)
-        scalar_memory_j = mem.total_j
-        if cfg.use_controller and reversible:
-            # the trace encodes the reversible computation pattern; the
-            # irreversible arm's whole-iteration buffering stays scalar
-            events, durations, t_total = mtr.merge_traces(fwd, bwd)
-            controller = mtr.replay(
-                events, cfg.edram, temp_c=cfg.temp_c, duration_s=t_total,
-                refresh_policy=cfg.refresh_policy,
-                alloc_policy=cfg.alloc_policy, freq_hz=cfg.freq_hz,
-                sample_scale=batch, op_durations=durations)
-            mem = controller.energy
-            stall_s = controller.stall_s
-            offchip = controller.offchip_bits
-            # report the bank-level verdict, not the scalar one: the
-            # iteration is refresh-free iff no bank actually refreshed and
-            # no over-retention bank was left unrefreshed (data loss)
-            rf = (not any(b.refreshed for b in controller.banks)
-                  and controller.safe)
-    else:
-        rf = True
-        mem = ed.sram_energy(cfg.edram, read_bits, write_bits, offchip)
-
-    compute_j = macs * (cfg.mac_pj if cfg.use_edram else cfg.mac_pj_fp16) \
-        * 1e-12
-    return IterationReport(
-        latency_s=total_time + stall_s
-        + (offchip / cfg.offchip_bw_bps if offchip else 0.0),
-        energy_j=compute_j + mem.total_j,
-        compute_j=compute_j,
-        memory_j=mem.total_j,
-        max_lifetime_s=max_life,
-        refresh_free=rf,
-        peak_live_bits=stored,
-        offchip_bits=offchip,
-        controller=controller,
-        scalar_memory_j=scalar_memory_j,
-        stall_s=stall_s,
-    )
+    warnings.warn(
+        "core.hwmodel.iteration() is deprecated; use repro.sim.run(Arm(...))",
+        DeprecationWarning, stacklevel=2)
+    return _iteration(cfg, blocks, reversible)
 
 
 def tta_eta(cfg: SystemConfig, blocks: Sequence[DuBlockSpec],
             iterations_to_target: float, reversible: bool = True):
-    """Time/Energy-to-Accuracy (§VI-F): per-iteration cost × iterations."""
-    rep = iteration(cfg, blocks, reversible)
+    """Time/Energy-to-Accuracy (§VI-F): per-iteration cost × iterations.
+
+    .. deprecated:: use ``repro.sim.run`` with ``Arm.iters_to_target`` set —
+       the ArmReport carries ``tta_s``/``eta_j`` directly.
+    """
+    warnings.warn(
+        "core.hwmodel.tta_eta() is deprecated; use repro.sim.run with "
+        "Arm.iters_to_target set", DeprecationWarning, stacklevel=2)
+    rep = _iteration(cfg, blocks, reversible)
     return {
         "tta_s": rep.latency_s * iterations_to_target,
         "eta_j": rep.energy_j * iterations_to_target,

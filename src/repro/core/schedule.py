@@ -28,12 +28,19 @@ class TraceEvent:
     ``alloc`` marks data live at iteration start (no write energy);
     ``write``/``read`` carry the op's traffic; ``free`` is the overwrite
     point — the last reader has run and the words are dead.
+
+    ``buffered`` marks whole-iteration activation buffers (the
+    irreversible/FR arm's forward stash): the controller places them at
+    full batch size — they are not streamed sample-by-sample through
+    ping-pong buffers — and their residency counts unscaled against
+    retention.
     """
     time: float
     op: str
     tensor: str
     kind: str
     bits: float
+    buffered: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +112,62 @@ def backward_ops(blocks: Sequence[DuBlockSpec], R: float) -> list[Op]:
     return ops
 
 
+def irreversible_training_ops(
+        blocks: Sequence[DuBlockSpec], R: float) -> tuple[list, frozenset]:
+    """One iteration of the irreversible (FR) baseline on a single timeline:
+    whole-iteration activation buffering instead of eq-2 recompute.
+
+    The forward pass is the same dataflow as :func:`forward_ops`, but each
+    branch activation is additionally copied into a whole-iteration buffer
+    (``SAVE*`` ops writing ``sv*`` tensors) right after production — the
+    conventional training discipline the reversible pattern eliminates.
+    The backward pass fetches each buffer back into a working copy
+    (``FETCH*``) instead of recomputing, then runs the same gradient ops.
+    SAVE/FETCH are zero-duration (DMA overlapped with compute); their
+    *traffic* is what the memory controller charges, and any buffer that
+    does not fit on-chip spills — one store plus one load per tensor.
+
+    Returns ``(ops, buffered)`` where ``buffered`` is the set of
+    whole-iteration buffer tensor names (``simulate(..., buffered=...)``
+    tags their trace events so the controller places them at full batch
+    size).
+    """
+    L = len(blocks)
+    ops: list[Op] = []
+    for l, b in enumerate(blocks):
+        tg, t1, t2 = latency(b.g.macs, R), latency(b.f1.macs, R), \
+            latency(b.f2.macs, R)
+        ops += [
+            Op(f"SAVE1_{l}", 0.0, (f"b1_{l}",), (f"sv1_{l}",)),
+            Op(f"G{l}", tg, (f"k{l}",), (f"k{l+1}",)),
+            Op(f"F1_{l}", t1, (f"b1_{l}", f"k{l+1}"), (f"t{l}",)),
+            Op(f"ADD2_{l}", 0.0, (f"b2_{l}", f"t{l}"), (f"b2_{l+1}",)),
+            Op(f"SAVE2_{l}", 0.0, (f"b2_{l+1}",), (f"sv2_{l}",)),
+            Op(f"F2_{l}", t2, (f"b2_{l+1}",), (f"s{l}",)),
+            Op(f"ADD1_{l}", 0.0, (f"b1_{l}", f"s{l}"), (f"b1_{l+1}",)),
+        ]
+    # the loss head turns the final activations into output gradients
+    ops.append(Op("LOSS", 0.0, (f"b1_{L}", f"b2_{L}"),
+                  (f"g1_{L}", f"g2_{L}")))
+    for l in reversed(range(L)):
+        b = blocks[l]
+        t1, t2 = latency(b.f1.macs_out, R), latency(b.f2.macs_out, R)
+        ops += [
+            # buffered activations come back instead of eq-2 recompute
+            Op(f"FETCH2_{l}", 0.0, (f"sv2_{l}",), (f"b2f_{l}",)),
+            Op(f"U2A_{l}", t2, (f"g1_{l+1}",), (f"u2a{l}",)),
+            Op(f"ADDM_{l}", 0.0, (f"g2_{l+1}", f"u2a{l}"), (f"m{l}",)),
+            Op(f"U2W_{l}", t2, (f"g1_{l+1}", f"b2f_{l}"), (f"q2_{l}",)),
+            Op(f"U1A_{l}", t1, (f"m{l}",), (f"u1a{l}",)),
+            Op(f"ADDS_{l}", 0.0, (f"g1_{l+1}", f"u1a{l}"), (f"g1_{l}",)),
+            Op(f"FETCH1_{l}", 0.0, (f"sv1_{l}",), (f"b1f_{l}",)),
+            Op(f"U1W_{l}", t1, (f"m{l}", f"b1f_{l}"), (f"q1_{l}",)),
+            Op(f"COPYG2_{l}", 0.0, (f"m{l}",), (f"g2_{l}",)),
+        ]
+    buffered = frozenset(f"sv{i}_{l}" for i in (1, 2) for l in range(L))
+    return ops, buffered
+
+
 def dependency_graph(ops: Sequence[Op]) -> nx.DiGraph:
     """Producer→consumer DAG (Fig 12b / 14b)."""
     g = nx.DiGraph()
@@ -129,7 +192,10 @@ def _sizes(blocks: Sequence[DuBlockSpec], bits: float) -> dict:
         for name in (f"b1_{l}", f"b2_{l}", f"b1_{l+1}", f"b2_{l+1}",
                      f"t{l}", f"s{l}", f"rs{l}", f"rt{l}", f"u2a{l}",
                      f"u1a{l}", f"m{l}", f"g1_{l}", f"g2_{l}",
-                     f"g1_{l+1}", f"g2_{l+1}", f"q1_{l}", f"q2_{l}"):
+                     f"g1_{l+1}", f"g2_{l+1}", f"q1_{l}", f"q2_{l}",
+                     # irreversible arm: whole-iteration activation saves
+                     # and their backward working copies
+                     f"sv1_{l}", f"sv2_{l}", f"b1f_{l}", f"b2f_{l}"):
             sizes[name] = br
         sizes[f"k{l}"] = bk
         sizes[f"k{l+1}"] = bk
@@ -138,14 +204,17 @@ def _sizes(blocks: Sequence[DuBlockSpec], bits: float) -> dict:
 
 def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
              bits_per_value: float = 58 / 9,
-             live_at_start: Sequence[str] = ()) -> SimResult:
+             live_at_start: Sequence[str] = (),
+             buffered: Sequence[str] = ()) -> SimResult:
     """Execute ``ops`` in order with the overwrite policy; measure lifetimes.
 
     A tensor becomes live at its producing op's end and dies after its last
     reader finishes (it is overwritten — Fig 12c's "x2 can be overwritten
-    once y3 is produced").
+    once y3 is produced").  Tensors named in ``buffered`` are tagged as
+    whole-iteration buffers on their trace events (see :class:`TraceEvent`).
     """
     sizes = _sizes(blocks, bits_per_value)
+    buffered = frozenset(buffered)
     last_read_op: dict = {}
     for op in ops:
         for t in op.reads:
@@ -160,7 +229,8 @@ def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
     read_bits = write_bits = 0.0
     schedule = []
     trace = [TraceEvent(time=0.0, op="<boot>", tensor=t, kind="alloc",
-                        bits=sizes.get(t, 0.0)) for t in live_at_start]
+                        bits=sizes.get(t, 0.0), buffered=t in buffered)
+             for t in live_at_start]
     for op in ops:
         start, end = t_now, t_now + op.duration
         t_now = end
@@ -168,13 +238,15 @@ def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
         for t in op.reads:
             read_bits += sizes.get(t, 0.0)
             trace.append(TraceEvent(time=start, op=op.name, tensor=t,
-                                    kind="read", bits=sizes.get(t, 0.0)))
+                                    kind="read", bits=sizes.get(t, 0.0),
+                                    buffered=t in buffered))
         for t in op.writes:
             write_bits += sizes.get(t, 0.0)
             write_time[t] = end
             live[t] = sizes.get(t, 0.0)
             trace.append(TraceEvent(time=end, op=op.name, tensor=t,
-                                    kind="write", bits=sizes.get(t, 0.0)))
+                                    kind="write", bits=sizes.get(t, 0.0),
+                                    buffered=t in buffered))
         peak = max(peak, sum(live.values()))
         # overwrite policy: free every tensor whose last reader just ran
         for t in op.reads:
@@ -184,7 +256,8 @@ def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
                 if t in live:
                     trace.append(TraceEvent(time=end, op=op.name, tensor=t,
                                             kind="free",
-                                            bits=sizes.get(t, 0.0)))
+                                            bits=sizes.get(t, 0.0),
+                                            buffered=t in buffered))
                 live.pop(t, None)
     return SimResult(lifetimes=lifetimes, peak_live_bits=peak,
                      read_bits=read_bits, write_bits=write_bits,
@@ -201,3 +274,14 @@ def simulate_training_iteration(blocks: Sequence[DuBlockSpec], R: float,
                    live_at_start=(f"b1_{L}", f"b2_{L}",
                                   f"g1_{L}", f"g2_{L}"))
     return fwd, bwd
+
+
+def simulate_irreversible_iteration(blocks: Sequence[DuBlockSpec], R: float,
+                                    bits_per_value: float = 16.0
+                                    ) -> SimResult:
+    """One FR-baseline iteration on a single timeline (forward + buffered
+    backward); the whole-iteration activation buffers appear as ``buffered``
+    trace events so the memory controller models their spills."""
+    ops, buffered = irreversible_training_ops(blocks, R)
+    return simulate(ops, blocks, bits_per_value,
+                    live_at_start=("b1_0", "b2_0", "k0"), buffered=buffered)

@@ -92,14 +92,28 @@ class Allocator:
 
     # -- allocation ------------------------------------------------------
     def place(self, tensor: str, bits: float, now: float,
-              expected_lifetime_s: Optional[float] = None) -> Placement:
-        """Allocate ``tensor``; spills off-chip when capacity is exceeded."""
+              expected_lifetime_s: Optional[float] = None,
+              lifetime_scale: float = 1.0,
+              reserve_words: int = 0) -> Placement:
+        """Allocate ``tensor``; spills off-chip when capacity is exceeded.
+
+        ``lifetime_scale`` converts this tensor's residency window into a
+        data lifetime for the refresh bookkeeping (1/batch for per-sample
+        streamed tensors, 1.0 for whole-iteration buffers).
+
+        ``reserve_words`` is a headroom floor this placement must leave
+        free: the trace replay passes the streamed working set's remaining
+        peak when placing whole-iteration buffers, so a low-priority
+        buffer spills instead of later evicting the dataflow's live
+        tensors.
+        """
         if tensor in self.placements:
             raise ValueError(f"{tensor} already placed")
         need = self.geometry.words_for(bits)
         tiers = self._tiers(expected_lifetime_s)
         flat = [i for tier in tiers for i in tier]
-        free_total = sum(self.banks[i].free_words for i in flat)
+        free_total = sum(self.banks[i].free_words for i in flat) \
+            - max(0, reserve_words)
         if need > free_total:
             self.spill_bits += bits
             self.spilled.append(tensor)
@@ -149,7 +163,8 @@ class Allocator:
         spans = []
         for i in flat:
             if i in takes:
-                self.banks[i].allocate(tensor, takes[i], now)
+                self.banks[i].allocate(tensor, takes[i], now,
+                                       scale=lifetime_scale)
                 spans.append((i, takes[i]))
         if self.policy == "pingpong" and spans:
             self._next_bank = (spans[0][0] + 1) % self.geometry.n_banks

@@ -58,6 +58,13 @@ def port_service_s(words: int, freq_hz: float) -> float:
 class _Residency:
     words: int
     write_t: float
+    # residency-to-data-lifetime scale: the weight-stationary dataflow
+    # streams the batch sample-by-sample, so a transient tensor resident
+    # for a whole-batch op window holds each sample's value only 1/batch
+    # of that time (scale = 1/batch); a whole-iteration buffered tensor
+    # (the FR baseline's activation stash) really holds its data the full
+    # window (scale = 1).
+    scale: float = 1.0
 
 
 class BankState:
@@ -74,7 +81,8 @@ class BankState:
         self.write_bits = 0.0
         self.stall_s = 0.0
         # refresh bookkeeping
-        self.max_resident_s = 0.0        # longest completed residency
+        self.max_resident_s = 0.0        # longest residency (scaled to data
+        #                                  lifetime, see _Residency.scale)
         self.refresh_count = 0
         self.refresh_bits = 0.0
         # ∫ occupied_bits dt — refresh energy integrates this
@@ -95,27 +103,30 @@ class BankState:
             self.occ_bit_s += self.occupied_bits * (now - self._last_t)
             self._last_t = now
 
-    def allocate(self, tensor: str, words: int, now: float) -> None:
+    def allocate(self, tensor: str, words: int, now: float,
+                 scale: float = 1.0) -> None:
         if words > self.free_words:
             raise ValueError(
                 f"bank {self.index}: {words} words > {self.free_words} free")
         self.advance(now)
-        self.resident[tensor] = _Residency(words=words, write_t=now)
+        self.resident[tensor] = _Residency(words=words, write_t=now,
+                                           scale=scale)
         self.used_words += words
         self.peak_words = max(self.peak_words, self.used_words)
 
     def rewrite(self, tensor: str, now: float) -> None:
         """In-place overwrite: residency lifetime restarts at ``now``."""
         r = self.resident[tensor]
-        self.max_resident_s = max(self.max_resident_s, now - r.write_t)
+        self.max_resident_s = max(self.max_resident_s,
+                                  (now - r.write_t) * r.scale)
         r.write_t = now
 
     def free(self, tensor: str, now: float) -> float:
-        """Release ``tensor``; returns its residency duration."""
+        """Release ``tensor``; returns its scaled residency duration."""
         r = self.resident.pop(tensor)
         self.advance(now)
         self.used_words -= r.words
-        dur = now - r.write_t
+        dur = (now - r.write_t) * r.scale
         self.max_resident_s = max(self.max_resident_s, dur)
         return dur
 
@@ -124,4 +135,5 @@ class BankState:
         lived until ``now`` (they survive into the next iteration)."""
         self.advance(now)
         for r in self.resident.values():
-            self.max_resident_s = max(self.max_resident_s, now - r.write_t)
+            self.max_resident_s = max(self.max_resident_s,
+                                      (now - r.write_t) * r.scale)

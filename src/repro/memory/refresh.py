@@ -38,22 +38,31 @@ class RefreshDecision:
     bank: int
     refreshed: bool
     needs_refresh: bool        # max resident lifetime ≥ retention
-    refresh_j: float
+    refresh_j: float           # read + restore total
     refresh_count: int
     stall_s: float
+    refresh_read_j: float = 0.0     # sense phase
+    refresh_restore_j: float = 0.0  # write-back phase
 
 
 class RefreshScheduler:
-    """Decides which banks to refresh and accounts energy + port stalls."""
+    """Decides which banks to refresh and accounts energy + port stalls.
+
+    ``retention_s`` overrides the temperature-derived retention floor —
+    pass ``math.inf`` to model a static technology (the SRAM baseline's
+    controller replay) that never needs refresh.
+    """
 
     def __init__(self, policy: str, temp_c: float, guard: float = 1.0,
-                 interval_s: float | None = None):
+                 interval_s: float | None = None,
+                 retention_s: float | None = None):
         if policy not in REFRESH_POLICIES:
             raise ValueError(f"unknown refresh policy {policy!r}; "
                              f"choose from {REFRESH_POLICIES}")
         self.policy = policy
         self.temp_c = temp_c
-        self.retention_s = ed.retention_s(temp_c)
+        self.retention_s = (retention_s if retention_s is not None
+                            else ed.retention_s(temp_c))
         self.interval_s = (interval_s if interval_s is not None
                            else ed.refresh_interval_s(temp_c, guard))
 
@@ -62,36 +71,42 @@ class RefreshScheduler:
         return bank.max_resident_s >= self.retention_s
 
     def account(self, banks: Sequence[BankState], duration_s: float,
-                freq_hz: float, refresh_pj_per_bit: float,
+                freq_hz: float, refresh_read_pj_per_bit: float,
+                refresh_restore_pj_per_bit: float,
                 lifetime_scale: float = 1.0) -> list[RefreshDecision]:
         """Charge refresh energy/stalls for one iteration of ``duration_s``.
 
+        Refresh energy is split into the sense/read phase and the
+        write-back/restore phase (``EDRAMConfig.refresh_read_pj`` /
+        ``refresh_restore_pj``); ``RefreshDecision.refresh_j`` stays the
+        total so existing consumers are unchanged.
+
         ``lifetime_scale`` rescales observed residency durations before the
-        retention comparison (the weight-stationary dataflow streams the
-        batch sample-by-sample, so a trace recorded at whole-batch op times
-        represents per-sample lifetimes 1/batch as long — hwmodel passes
-        1/batch, mirroring its scalar path).
+        retention comparison.  Since ``BankState`` now scales residencies
+        per tensor at free/finalize time (``_Residency.scale``), callers
+        that pre-scale should pass the default 1.0.
 
         Mutates each bank's ``refresh_count``/``refresh_bits``/``stall_s``
         counters and returns per-bank decisions.
         """
         ticks = math.ceil(duration_s / self.interval_s) \
-            if duration_s > 0 else 0
+            if duration_s > 0 and math.isfinite(self.interval_s) else 0
         out = []
         for b in banks:
             needs = (b.max_resident_s * lifetime_scale) >= self.retention_s
             held_data = b.occ_bit_s > 0
-            refreshed = held_data and (
+            refreshed = held_data and ticks > 0 and (
                 self.policy == "always"
                 or (self.policy == "selective" and needs))
-            refresh_j = 0.0
+            read_j = restore_j = 0.0
             count = 0
             stall = 0.0
             if refreshed:
                 # ∫occ·dt / interval — fractional intervals included, so a
                 # short iteration still pays its pro-rata share
                 bit_intervals = b.occ_bit_s / self.interval_s
-                refresh_j = bit_intervals * refresh_pj_per_bit * 1e-12
+                read_j = bit_intervals * refresh_read_pj_per_bit * 1e-12
+                restore_j = bit_intervals * refresh_restore_pj_per_bit * 1e-12
                 count = ticks
                 # each refresh pulse occupies the ports for its resident
                 # words (read + restore through the same word line)
@@ -102,6 +117,8 @@ class RefreshScheduler:
                 b.stall_s += stall
             out.append(RefreshDecision(bank=b.index, refreshed=refreshed,
                                        needs_refresh=needs,
-                                       refresh_j=refresh_j,
-                                       refresh_count=count, stall_s=stall))
+                                       refresh_j=read_j + restore_j,
+                                       refresh_count=count, stall_s=stall,
+                                       refresh_read_j=read_j,
+                                       refresh_restore_j=restore_j))
         return out

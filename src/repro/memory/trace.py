@@ -76,6 +76,8 @@ class ControllerReport:
     spill_bits: float              # capacity-overflow bits (per-sample)
     offchip_bits: float            # traffic to/from spilled tensors
     spilled_tensors: tuple
+    refresh_read_j: float = 0.0    # refresh sense phase (sums to refresh_j
+    refresh_restore_j: float = 0.0  # with the restore/write-back phase)
 
     @property
     def energy(self) -> ed.MemoryEnergy:
@@ -100,18 +102,28 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
            freq_hz: float = 500e6,
            sample_scale: float = 1.0,
            op_durations: Optional[dict] = None,
-           refresh_guard: float = 1.0) -> ControllerReport:
+           refresh_guard: float = 1.0,
+           retention_s: Optional[float] = None) -> ControllerReport:
     """Replay ``events`` through the bank-level controller.
 
     ``sample_scale`` is the mini-batch size (see module docstring);
     ``op_durations`` (op name → seconds) enables the bank-conflict model —
     an op whose per-bank port time exceeds its compute time stalls the
     array for the difference.
+
+    Events tagged ``buffered`` are whole-iteration buffers (the FR arm's
+    activation stash): they are placed at full batch size — they cannot be
+    streamed sample-by-sample — and their residency counts unscaled
+    against retention.
+
+    ``retention_s`` overrides the temperature-derived retention floor —
+    pass ``math.inf`` to replay an SRAM tier that never refreshes.
     """
     geom = BankGeometry.from_edram(cfg)
-    sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard)
+    sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
+                             retention_s=retention_s)
     alloc = Allocator(geom, policy=alloc_policy,
-                      retention_s=sched.retention_s * sample_scale)
+                      retention_s=sched.retention_s)
 
     # prepass: expected residency window per tensor (write → free), at
     # trace time — the lifetime-aware allocator colors banks with it.  A
@@ -129,7 +141,26 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     for t, t0 in first_seen.items():     # never freed ⇒ lives to trace end
         window[t] = max(window.get(t, 0.0), duration_s - t0)
 
+    # prepass 2: peak of the streamed (non-buffered) working set in words.
+    # Whole-iteration buffers are lowest priority — they may only take
+    # space the dataflow's live tensors will never need, otherwise they
+    # spill (one store + one load) instead of evicting the stream later.
+    live_w: dict[str, int] = {}
+    transient_peak_w = cur_w = 0
+    for ev in events:
+        if ev.buffered:
+            continue
+        if ev.kind in ("alloc", "write"):
+            if ev.tensor not in live_w:
+                w = geom.words_for(ev.bits / sample_scale)
+                live_w[ev.tensor] = w
+                cur_w += w
+                transient_peak_w = max(transient_peak_w, cur_w)
+        elif ev.kind == "free":
+            cur_w -= live_w.pop(ev.tensor, 0)
+
     read_j = write_j = offchip_j = 0.0
+    transient_now_w = 0               # on-chip streamed words right now
     offchip_bits = 0.0
     # per-op, per-bank words touched (the conflict model's unit)
     op_read_words: dict[str, dict[int, int]] = {}
@@ -147,13 +178,23 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     for ev in events:
         if ev.kind not in EVENT_KINDS:
             raise ValueError(f"unknown trace event kind {ev.kind!r}")
+        # whole-iteration buffers hold every sample's value at once
+        scale = 1.0 if ev.buffered else 1.0 / sample_scale
         if ev.kind in ("alloc", "write"):
             p = alloc.location(ev.tensor)
             if p is not None:
                 alloc.rewrite(ev.tensor, ev.time)
             else:
-                p = alloc.place(ev.tensor, ev.bits / sample_scale, ev.time,
-                                expected_lifetime_s=window.get(ev.tensor))
+                w = window.get(ev.tensor)
+                reserve = (max(0, transient_peak_w - transient_now_w)
+                           if ev.buffered else 0)
+                p = alloc.place(ev.tensor, ev.bits * scale, ev.time,
+                                expected_lifetime_s=(
+                                    None if w is None else w * scale),
+                                lifetime_scale=scale,
+                                reserve_words=reserve)
+                if not ev.buffered and not p.offchip:
+                    transient_now_w += sum(sw for _, sw in p.spans)
             if ev.kind == "write":
                 if p.offchip:
                     offchip_j += ev.bits * cfg.dram_pj_per_bit * 1e-12
@@ -176,6 +217,9 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                         ev.bits / max(1, len(p.spans))
                 _touch(op_read_words, ev.op, p, ev.bits)
         elif ev.kind == "free":
+            p = alloc.location(ev.tensor)
+            if not ev.buffered and p is not None and not p.offchip:
+                transient_now_w -= sum(sw for _, sw in p.spans)
             alloc.free(ev.tensor, ev.time)
 
     for b in alloc.banks:
@@ -202,10 +246,12 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 argmax = max(per_bank, key=per_bank.get)
                 alloc.banks[argmax].stall_s += extra
 
+    # residencies were scaled per tensor at the bank level, so account()
+    # compares them against retention directly (lifetime_scale=1)
     decisions = sched.account(alloc.banks, duration_s, freq_hz,
-                              cfg.refresh_pj_per_bit,
-                              lifetime_scale=1.0 / sample_scale)
-    refresh_j = sum(d.refresh_j for d in decisions)
+                              cfg.refresh_read_pj, cfg.refresh_restore_pj)
+    refresh_read_j = sum(d.refresh_read_j for d in decisions)
+    refresh_restore_j = sum(d.refresh_restore_j for d in decisions)
     refresh_stall = sum(d.stall_s for d in decisions)
 
     banks = tuple(
@@ -215,14 +261,17 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             refresh_j=d.refresh_j, stall_s=b.stall_s,
             peak_words=b.peak_words,
             peak_occupancy=b.peak_words / geom.words_per_bank,
-            max_resident_lifetime_s=b.max_resident_s / sample_scale,
+            max_resident_lifetime_s=b.max_resident_s,
             needs_refresh=d.needs_refresh, refreshed=d.refreshed)
         for b, d in zip(alloc.banks, decisions))
 
     return ControllerReport(
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         temp_c=temp_c, duration_s=duration_s, banks=banks,
-        read_j=read_j, write_j=write_j, refresh_j=refresh_j,
+        read_j=read_j, write_j=write_j,
+        refresh_j=refresh_read_j + refresh_restore_j,
         offchip_j=offchip_j, stall_s=stall_s + refresh_stall,
         spill_bits=alloc.spill_bits, offchip_bits=offchip_bits,
-        spilled_tensors=tuple(alloc.spilled))
+        spilled_tensors=tuple(alloc.spilled),
+        refresh_read_j=refresh_read_j,
+        refresh_restore_j=refresh_restore_j)

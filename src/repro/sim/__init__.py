@@ -1,0 +1,34 @@
+"""``repro.sim`` — the unified arm/pipeline simulation API (CAMEL §V/§VI).
+
+One entry point for every system arm::
+
+    from repro import sim
+
+    report = sim.run(sim.get_arm("DuDNN+CAMEL"))        # ArmReport
+    reports = sim.sweep([sim.get_arm(n) for n in sim.arms()])
+    fr = sim.run(sim.get_arm("FR+SRAM").with_workload(n_blocks=4))
+
+Every arm — including the irreversible FR/SRAM baseline — executes through
+the same staged pipeline (schedule → trace → memory-controller replay →
+energy/latency), so the bank-level ``repro.memory`` controller models all
+of them; the scalar closed forms ride along as a cross-validation oracle
+(``ArmReport.oracle_rel_err``).  Reports are plain-dict/JSON
+round-trippable via ``to_dict``/``from_dict``.
+
+Custom arms are frozen dataclasses (``sim.Arm``) and can be registered
+(``sim.register_arm``); custom pipelines swap stages
+(``sim.Pipeline.with_stage``) — the hook the planned closed-loop stall
+model uses.
+"""
+from repro.sim.arm import (ARM_REGISTRY, ITERS_CHAIN, ITERS_TARGET,
+                           WORKLOAD_KINDS, Arm, WorkloadSpec, arms, get_arm,
+                           register_arm)
+from repro.sim.pipeline import (DEFAULT_PIPELINE, DEFAULT_STAGES, Pipeline,
+                                SimContext, run, sweep)
+from repro.sim.report import ArmReport
+
+__all__ = [
+    "ARM_REGISTRY", "Arm", "ArmReport", "DEFAULT_PIPELINE", "DEFAULT_STAGES",
+    "ITERS_CHAIN", "ITERS_TARGET", "Pipeline", "SimContext", "WORKLOAD_KINDS",
+    "WorkloadSpec", "arms", "get_arm", "register_arm", "run", "sweep",
+]

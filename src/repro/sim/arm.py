@@ -1,0 +1,131 @@
+"""Declarative system arms (CAMEL Fig 24) and the arm registry.
+
+An :class:`Arm` is everything ``sim.run`` needs, frozen in one place: a
+workload (either a parametric :class:`WorkloadSpec` or explicit
+``DuBlockSpec`` blocks), the :class:`~repro.core.hwmodel.SystemConfig`
+(array size, memory tech, refresh/alloc policies), the training pattern
+(reversible or whole-iteration buffering), and the measured
+iterations-to-target that scale per-iteration cost into TTA/ETA.
+
+The registry ships the paper's four arms:
+
+=============  ==========  ===========================  ================
+name           pattern     memory system                iters to target
+=============  ==========  ===========================  ================
+DuDNN+CAMEL    reversible  12×32 KB eDRAM, selective    1000
+FR+SRAM        buffered    4×48 KB SRAM + off-chip      1000
+CA+CAMEL       reversible  12×32 KB eDRAM, selective    2500 (§VI-F)
+BO+CAMEL       reversible  12×32 KB eDRAM, selective    never reaches
+=============  ==========  ===========================  ================
+
+``register_arm`` adds custom arms (sweep points, ablations) to the same
+namespace ``sim.get_arm`` resolves from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import hwmodel as hw
+from repro.core import lifetime as lt
+
+WORKLOAD_KINDS = ("duplex_cnn", "lm_branch")
+
+# convergence behaviour measured in benchmarks/table2 at small scale
+# (§VI-F): CA needs ~2.5× the iterations; BO never reaches the target.
+ITERS_TARGET = 1000.0
+ITERS_CHAIN = 2500.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Parametric DuDNN workload (resolved to ``DuBlockSpec`` blocks).
+
+    For ``kind="lm_branch"``, ``spatial`` is the pooled sequence length,
+    ``c_branch`` the branch width d_branch and ``c_backbone`` d_model.
+    """
+    kind: str = "duplex_cnn"
+    n_blocks: int = 6
+    batch: int = 48
+    spatial: int = 7
+    c_branch: int = 48
+    c_backbone: int = 160
+    kernel: int = 3
+
+    def blocks(self) -> Tuple[lt.DuBlockSpec, ...]:
+        if self.kind == "duplex_cnn":
+            return tuple(lt.duplex_block_specs(
+                self.n_blocks, self.batch, self.spatial,
+                self.c_branch, self.c_backbone, self.kernel))
+        if self.kind == "lm_branch":
+            return tuple(lt.lm_branch_block_specs(
+                self.n_blocks, self.batch, self.spatial,
+                self.c_branch, self.c_backbone))
+        raise ValueError(f"unknown workload kind {self.kind!r}; "
+                         f"choose from {WORKLOAD_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Arm:
+    """One system arm: workload + system config + memory policies."""
+    name: str
+    system: hw.SystemConfig = hw.SystemConfig()
+    reversible: bool = True
+    workload: Optional[WorkloadSpec] = WorkloadSpec()
+    blocks: Optional[Tuple[lt.DuBlockSpec, ...]] = None
+    iters_to_target: Optional[float] = ITERS_TARGET
+
+    def resolve_blocks(self) -> Tuple[lt.DuBlockSpec, ...]:
+        """Explicit ``blocks`` win over the parametric ``workload``."""
+        if self.blocks is not None:
+            return tuple(self.blocks)
+        if self.workload is None:
+            raise ValueError(
+                f"arm {self.name!r} has neither blocks nor workload")
+        return self.workload.blocks()
+
+    def with_workload(self, **fields) -> "Arm":
+        """New arm with workload fields replaced (clears a blocks override)."""
+        wl = dataclasses.replace(self.workload or WorkloadSpec(), **fields)
+        return dataclasses.replace(self, workload=wl, blocks=None)
+
+    def with_system(self, **fields) -> "Arm":
+        """New arm with SystemConfig fields replaced."""
+        return dataclasses.replace(
+            self, system=dataclasses.replace(self.system, **fields))
+
+
+# ---------------------------------------------------------------- registry
+
+ARM_REGISTRY: dict = {}
+
+
+def register_arm(arm: Arm, overwrite: bool = False) -> Arm:
+    if arm.name in ARM_REGISTRY and not overwrite:
+        raise ValueError(f"arm {arm.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    ARM_REGISTRY[arm.name] = arm
+    return arm
+
+
+def get_arm(name: str) -> Arm:
+    try:
+        return ARM_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arm {name!r}; registered: "
+                       f"{', '.join(sorted(ARM_REGISTRY))}") from None
+
+
+def arms() -> Tuple[str, ...]:
+    """Registered arm names, paper arms first."""
+    return tuple(ARM_REGISTRY)
+
+
+register_arm(Arm(name="DuDNN+CAMEL", system=hw.SystemConfig(),
+                 reversible=True, iters_to_target=ITERS_TARGET))
+register_arm(Arm(name="FR+SRAM", system=hw._SRAM_ONLY,
+                 reversible=False, iters_to_target=ITERS_TARGET))
+register_arm(Arm(name="CA+CAMEL", system=hw.SystemConfig(name="CA+CAMEL"),
+                 reversible=True, iters_to_target=ITERS_CHAIN))
+register_arm(Arm(name="BO+CAMEL", system=hw.SystemConfig(name="BO+CAMEL"),
+                 reversible=True, iters_to_target=None))

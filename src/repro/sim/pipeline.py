@@ -1,0 +1,365 @@
+"""The staged simulation pipeline behind ``sim.run``.
+
+Every arm flows through the same four stages::
+
+    schedule  — build the iteration's op schedule (reversible pattern or
+                whole-iteration activation buffering) and simulate it
+    trace     — flatten the schedule onto one trace timeline; aggregate
+                traffic, peak-live and lifetime numbers
+    memory    — replay the trace through the bank-level ``repro.memory``
+                controller (eDRAM banks, or the SRAM baseline's banks with
+                an infinite retention floor and off-chip spills)
+    energy    — systolic-array compute energy, scalar cross-validation
+                oracle, latency/TTA/ETA; assembles the ArmReport
+
+Stages are pluggable: each is a ``(name, fn(arm, ctx))`` pair and
+``Pipeline.with_stage`` / ``insert_after`` produce modified pipelines —
+the planned closed-loop stall model replaces the ``memory`` stage without
+touching the rest (see ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+from repro.core import edram as ed
+from repro.core import hwmodel as hw
+from repro.core import schedule as sc
+from repro.core.lifetime import array_throughput
+from repro.memory import trace as mtr
+from repro.sim.arm import Arm
+from repro.sim.report import ArmReport
+
+# the SRAM tier stores FP16 values; one value per word
+SRAM_WORD_BITS = 16
+
+
+@dataclasses.dataclass
+class SimContext:
+    """Mutable scratchpad threaded through the stages; custom stages read
+    and write whichever fields they need."""
+    blocks: tuple = ()
+    bits: float = 0.0              # bits per value (BFP on eDRAM, FP16 else)
+    R: float = 0.0                 # effective MAC/s
+    batch: float = 1.0
+    fwd: object = None             # SimResult (reversible pattern)
+    bwd: object = None
+    combined: object = None        # SimResult (irreversible single timeline)
+    events: list = dataclasses.field(default_factory=list)
+    op_durations: dict = dataclasses.field(default_factory=dict)
+    duration_s: float = 0.0
+    read_bits: float = 0.0
+    write_bits: float = 0.0
+    peak_live_bits: float = 0.0
+    max_lifetime_s: float = 0.0    # per-sample data lifetime
+    mem_cfg: object = None         # EDRAMConfig the controller replayed with
+    controller: object = None      # ControllerReport (None on scalar path)
+    report: object = None          # ArmReport (set by the energy stage)
+
+
+# ------------------------------------------------------------------ stages
+
+def stage_schedule(arm: Arm, ctx: SimContext) -> None:
+    """Build and simulate the iteration's op schedule."""
+    cfg = arm.system
+    blocks = arm.resolve_blocks()
+    ctx.blocks = blocks
+    ctx.bits = hw.BFP_BITS if cfg.use_edram else hw.FP16_BITS
+    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
+    ctx.R = array_throughput(cfg.array, cfg.freq_hz, specs, cfg.bfp_group)
+    ctx.batch = max(blocks[0].f1.batch, 1)
+    if arm.reversible:
+        ctx.fwd, ctx.bwd = sc.simulate_training_iteration(
+            blocks, ctx.R, ctx.bits)
+    else:
+        ctx.combined = sc.simulate_irreversible_iteration(
+            blocks, ctx.R, ctx.bits)
+
+
+def stage_trace(arm: Arm, ctx: SimContext) -> None:
+    """One trace timeline + aggregate traffic/lifetime numbers."""
+    if arm.reversible:
+        ctx.events, ctx.op_durations, ctx.duration_s = mtr.merge_traces(
+            ctx.fwd, ctx.bwd)
+        ctx.read_bits = ctx.fwd.read_bits + ctx.bwd.read_bits
+        ctx.write_bits = ctx.fwd.write_bits + ctx.bwd.write_bits
+        ctx.peak_live_bits = max(ctx.fwd.peak_live_bits,
+                                 ctx.bwd.peak_live_bits)
+        # weight-stationary streaming: per-sample producer→consumer window
+        ctx.max_lifetime_s = max(ctx.fwd.max_lifetime,
+                                 ctx.bwd.max_lifetime) / ctx.batch
+        return
+    sim = ctx.combined
+    ctx.events = list(sim.trace)
+    ctx.op_durations = {name: end - start
+                        for name, start, end in sim.schedule}
+    ctx.duration_s = sim.total_time
+    ctx.read_bits = sim.read_bits
+    ctx.write_bits = sim.write_bits
+    ctx.peak_live_bits = sim.peak_live_bits
+    # whole-iteration buffers hold every sample, so their residency IS the
+    # data lifetime; transients stream per sample
+    buffered = {e.tensor for e in sim.trace if e.buffered}
+    life = [(t, d) for t, d in sim.lifetimes.items()]
+    ctx.max_lifetime_s = max(
+        [d if t in buffered else d / ctx.batch for t, d in life],
+        default=0.0)
+
+
+def _sram_mem_config(cfg: hw.SystemConfig) -> ed.EDRAMConfig:
+    """The SRAM baseline's on-chip tier as controller geometry: the same
+    bank/word machinery, SRAM access energies, no refresh."""
+    return dataclasses.replace(
+        cfg.edram,
+        word_bits=SRAM_WORD_BITS,
+        n_banks=cfg.sram_banks,
+        bank_kb=cfg.onchip_bits / 8.0 / 1024.0 / cfg.sram_banks,
+        read_pj_per_bit=cfg.edram.sram_read_pj_per_bit,
+        write_pj_per_bit=cfg.edram.sram_write_pj_per_bit)
+
+
+def stage_memory(arm: Arm, ctx: SimContext) -> None:
+    """Trace-driven replay through the bank-level controller."""
+    cfg = arm.system
+    if not cfg.use_controller:
+        return
+    if cfg.use_edram:
+        mem_cfg, retention, policy = cfg.edram, None, cfg.refresh_policy
+    else:
+        # SRAM holds data indefinitely: infinite retention, never refresh
+        mem_cfg, retention, policy = _sram_mem_config(cfg), math.inf, "none"
+    ctx.mem_cfg = mem_cfg
+    ctx.controller = mtr.replay(
+        ctx.events, mem_cfg, temp_c=cfg.temp_c, duration_s=ctx.duration_s,
+        refresh_policy=policy, alloc_policy=cfg.alloc_policy,
+        freq_hz=cfg.freq_hz, sample_scale=ctx.batch,
+        op_durations=ctx.op_durations, retention_s=retention)
+
+
+def _buffered_partition(events) -> tuple[float, list]:
+    """Peak live bits of the streamed transients, and the whole-iteration
+    buffers as (tensor, bits) in first-write order."""
+    live: dict = {}
+    peak = 0.0
+    saves: list = []
+    seen: set = set()
+    for ev in events:
+        if ev.buffered:
+            if ev.kind in ("alloc", "write") and ev.tensor not in seen:
+                seen.add(ev.tensor)
+                saves.append((ev.tensor, ev.bits))
+            continue
+        if ev.kind in ("alloc", "write"):
+            live[ev.tensor] = ev.bits
+            peak = max(peak, sum(live.values()))
+        elif ev.kind == "free":
+            live.pop(ev.tensor, None)
+    return peak, saves
+
+
+def _scalar_memory(arm: Arm, ctx: SimContext):
+    """The closed-form cross-validation oracle: per-sample streamed
+    transients on-chip, whole-iteration buffers held greedily until
+    capacity runs out, one store + one load per spilled buffer.
+
+    Only tight while the streamed working set fits on-chip: when even the
+    per-sample transients overflow capacity, the controller models their
+    spills too and the closed form (which assumes all streamed traffic
+    stays on-chip) undercounts — ``ArmReport.oracle_rel_err`` surfaces
+    the gap.
+
+    Returns ``(MemoryEnergy, offchip_bits, refresh_free)``.
+    """
+    cfg = arm.system
+    transient_peak, saves = _buffered_partition(ctx.events)
+    budget = cfg.onchip_bits - transient_peak / ctx.batch
+    held = spilled = 0.0
+    for _, bits in saves:
+        if held + bits <= budget:
+            held += bits
+        else:
+            spilled += bits
+    offchip_bits = 2.0 * spilled          # store once, load once
+    # a spilled buffer's store/load traffic moves off-chip, not on-chip
+    read_bits = ctx.read_bits - spilled
+    write_bits = ctx.write_bits - spilled
+    if cfg.use_edram:
+        rf = ed.refresh_free(ctx.max_lifetime_s, cfg.temp_c)
+        mem = ed.edram_energy(cfg.edram, read_bits, write_bits,
+                              ctx.peak_live_bits, ctx.duration_s,
+                              cfg.temp_c, needs_refresh=not rf)
+        if offchip_bits:
+            mem = dataclasses.replace(
+                mem, offchip_j=offchip_bits * cfg.edram.dram_pj_per_bit
+                * 1e-12)
+        return mem, offchip_bits, rf
+    mem = ed.sram_energy(cfg.edram, read_bits, write_bits, offchip_bits)
+    return mem, offchip_bits, True
+
+
+def stage_energy(arm: Arm, ctx: SimContext) -> None:
+    """Compute energy + latency accounting; assembles the ArmReport."""
+    cfg = arm.system
+    blocks = ctx.blocks
+    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
+    # gradient ops (U1a/U1w/U2a/U2w); the reversible arm also pays the
+    # eq-2 input recompute (the paper's accepted overhead, §III)
+    macs = sum(s.macs for s in specs) + sum(
+        b.f1.macs_out * 2 + b.f2.macs_out * 2 for b in blocks)
+    if arm.reversible:
+        macs += sum(b.f1.macs_out + b.f2.macs_out for b in blocks)
+    compute_j = macs * (cfg.mac_pj if cfg.use_edram
+                        else cfg.mac_pj_fp16) * 1e-12
+
+    scalar_mem, scalar_offchip, rf_scalar = _scalar_memory(arm, ctx)
+    ctrl = ctx.controller
+    if ctrl is not None:
+        memory_j = ctrl.energy.total_j
+        stall_s = ctrl.stall_s
+        offchip_bits = ctrl.offchip_bits
+        # the bank-level verdict: refresh-free iff no bank refreshed and no
+        # over-retention bank was left unrefreshed (data loss)
+        rf = ((not any(b.refreshed for b in ctrl.banks)) and ctrl.safe
+              if cfg.use_edram else True)
+    else:
+        memory_j = scalar_mem.total_j
+        stall_s = 0.0
+        offchip_bits = scalar_offchip
+        rf = rf_scalar if cfg.use_edram else True
+
+    latency_s = ctx.duration_s + stall_s + (
+        offchip_bits / cfg.offchip_bw_bps if offchip_bits else 0.0)
+    energy_j = compute_j + memory_j
+    rel_err = (abs(memory_j - scalar_mem.total_j) / scalar_mem.total_j
+               if scalar_mem.total_j > 0 else 0.0)
+    iters = arm.iters_to_target
+    ctx.report = ArmReport(
+        arm=arm.name,
+        reversible=arm.reversible,
+        latency_s=latency_s,
+        energy_j=energy_j,
+        compute_j=compute_j,
+        memory_j=memory_j,
+        scalar_memory_j=scalar_mem.total_j,
+        oracle_rel_err=rel_err,
+        stall_s=stall_s,
+        max_lifetime_s=ctx.max_lifetime_s,
+        refresh_free=rf,
+        peak_live_bits=ctx.peak_live_bits,
+        offchip_bits=offchip_bits,
+        iters_to_target=iters,
+        tta_s=latency_s * iters if iters else None,
+        eta_j=energy_j * iters if iters else None,
+        config=_config_dict(arm),
+        memory=_memory_dict(ctrl),
+        controller=ctrl,
+    )
+
+
+def _config_dict(arm: Arm) -> dict:
+    """The fully resolved arm as a JSON-safe dict."""
+    return {
+        "name": arm.name,
+        "reversible": arm.reversible,
+        "iters_to_target": arm.iters_to_target,
+        "system": dataclasses.asdict(arm.system),
+        "workload": (dataclasses.asdict(arm.workload)
+                     if arm.workload is not None and arm.blocks is None
+                     else None),
+        "blocks": ([dataclasses.asdict(b) for b in arm.blocks]
+                   if arm.blocks is not None else None),
+    }
+
+
+def _memory_dict(ctrl) -> dict:
+    """ControllerReport as a JSON-safe dict (empty-ish on the scalar path)."""
+    if ctrl is None:
+        return {"mode": "scalar", "banks": [], "spilled": []}
+    return {
+        "mode": "controller",
+        "refresh_policy": ctrl.refresh_policy,
+        "alloc_policy": ctrl.alloc_policy,
+        "temp_c": ctrl.temp_c,
+        "duration_s": ctrl.duration_s,
+        "read_j": ctrl.read_j,
+        "write_j": ctrl.write_j,
+        "refresh_j": ctrl.refresh_j,
+        "refresh_read_j": ctrl.refresh_read_j,
+        "refresh_restore_j": ctrl.refresh_restore_j,
+        "offchip_j": ctrl.offchip_j,
+        "stall_s": ctrl.stall_s,
+        "spill_bits": ctrl.spill_bits,
+        "offchip_bits": ctrl.offchip_bits,
+        "refresh_count": ctrl.refresh_count,
+        "safe": ctrl.safe,
+        "spilled": list(ctrl.spilled_tensors),
+        "banks": [dataclasses.asdict(b) for b in ctrl.banks],
+    }
+
+
+# ---------------------------------------------------------------- pipeline
+
+Stage = Tuple[str, Callable[[Arm, SimContext], None]]
+
+DEFAULT_STAGES: Tuple[Stage, ...] = (
+    ("schedule", stage_schedule),
+    ("trace", stage_trace),
+    ("memory", stage_memory),
+    ("energy", stage_energy),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """An ordered tuple of named stages; immutable — the ``with_*``
+    helpers return modified copies."""
+    stages: Tuple[Stage, ...] = DEFAULT_STAGES
+
+    def stage_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.stages)
+
+    def _require(self, name: str) -> None:
+        if name not in self.stage_names():
+            raise KeyError(f"no stage {name!r}; have "
+                           f"{', '.join(self.stage_names())}")
+
+    def with_stage(self, name: str, fn: Callable) -> "Pipeline":
+        """Replace stage ``name`` with ``fn(arm, ctx)``."""
+        self._require(name)
+        return Pipeline(tuple((n, fn if n == name else f)
+                              for n, f in self.stages))
+
+    def insert_after(self, name: str, new_name: str,
+                     fn: Callable) -> "Pipeline":
+        """Insert a new stage right after ``name`` (e.g. a stall model
+        post-processing the controller report before energy accounting)."""
+        self._require(name)
+        out: list = []
+        for n, f in self.stages:
+            out.append((n, f))
+            if n == name:
+                out.append((new_name, fn))
+        return Pipeline(tuple(out))
+
+    def run(self, arm: Arm) -> tuple:
+        """Run all stages; returns ``(ArmReport, SimContext)``."""
+        ctx = SimContext()
+        for _, fn in self.stages:
+            fn(arm, ctx)
+        return ctx.report, ctx
+
+
+DEFAULT_PIPELINE = Pipeline()
+
+
+def run(arm: Arm, pipeline: Optional[Pipeline] = None) -> ArmReport:
+    """Simulate one arm through the staged pipeline."""
+    report, _ = (pipeline or DEFAULT_PIPELINE).run(arm)
+    return report
+
+
+def sweep(arms: Sequence[Arm],
+          pipeline: Optional[Pipeline] = None) -> list:
+    """Simulate several arms; returns one ArmReport per arm, in order."""
+    return [run(a, pipeline) for a in arms]

@@ -1,0 +1,61 @@
+"""Structured simulation reports (the ``repro.sim`` pipeline's output).
+
+:class:`ArmReport` is the single result type of ``sim.run(arm)``: flat
+scalar fields for the headline numbers, plus two plain-dict payloads
+(``config`` — the fully resolved arm, ``memory`` — the controller's
+per-bank breakdown).  Reports round-trip through ``to_dict()`` /
+``from_dict()`` and plain JSON losslessly, so benchmark records and sweep
+artifacts are self-describing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmReport:
+    """One system arm's per-iteration cost and TTA/ETA projection."""
+    arm: str
+    reversible: bool
+    latency_s: float
+    energy_j: float
+    compute_j: float
+    memory_j: float
+    # the scalar closed-form path, kept as a cross-validation oracle
+    scalar_memory_j: float
+    oracle_rel_err: float
+    stall_s: float
+    max_lifetime_s: float
+    refresh_free: bool
+    peak_live_bits: float
+    offchip_bits: float
+    # convergence-scaled projections (§VI-F); None when the arm has no
+    # iters_to_target (BO never reaches the accuracy target)
+    iters_to_target: Optional[float]
+    tta_s: Optional[float]
+    eta_j: Optional[float]
+    # fully resolved inputs and the controller's breakdown, JSON-safe
+    config: dict = dataclasses.field(default_factory=dict)
+    memory: dict = dataclasses.field(default_factory=dict)
+    # the live ControllerReport object for python consumers; not part of
+    # the serialized form and excluded from equality
+    controller: object = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    _SCALARS = ("arm", "reversible", "latency_s", "energy_j", "compute_j",
+                "memory_j", "scalar_memory_j", "oracle_rel_err", "stall_s",
+                "max_lifetime_s", "refresh_free", "peak_live_bits",
+                "offchip_bits", "iters_to_target", "tta_s", "eta_j")
+
+    def to_dict(self) -> dict:
+        """Plain-JSON form (drops the live ``controller`` object)."""
+        d = {k: getattr(self, k) for k in self._SCALARS}
+        d["config"] = self.config
+        d["memory"] = self.memory
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ArmReport":
+        known = {f.name for f in dataclasses.fields(cls)} - {"controller"}
+        return cls(**{k: v for k, v in d.items() if k in known})

@@ -1,0 +1,83 @@
+"""Hypothesis property tests for the tensor-to-bank allocator policies
+(optional-dep gated like tests/test_bfp.py): across random place/free
+sequences and all three policies —
+
+- no two live tensors ever share words (per-bank resident word counts are
+  exclusive and sum exactly to the bank's used words),
+- bank capacity is never exceeded,
+- frees return every word (an emptied allocator is all-zeros).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings
+
+from repro.core import edram as ed
+from repro.memory import ALLOC_POLICIES, Allocator, BankGeometry
+
+GEOM = BankGeometry(word_bits=58, words_per_bank=64, n_banks=6)
+
+# (bits, expected lifetime) pairs; lifetimes straddle the retention floor
+_RETENTION = 1e-5
+_steps = st.lists(
+    st.tuples(st.integers(min_value=1, max_value=58 * 96),
+              st.sampled_from([_RETENTION / 10, _RETENTION * 10]),
+              st.booleans()),          # free-something-afterwards flag
+    min_size=1, max_size=80)
+
+
+def _check_invariants(alloc: Allocator) -> None:
+    for bank in alloc.banks:
+        # capacity never exceeded, and words are exclusively owned: the
+        # per-tensor residencies tile the bank's used words exactly
+        assert 0 <= bank.used_words <= GEOM.words_per_bank
+        assert sum(r.words for r in bank.resident.values()) == \
+            bank.used_words
+
+
+@pytest.mark.parametrize("policy", ALLOC_POLICIES)
+@settings(max_examples=40, deadline=None)
+@given(steps=_steps)
+def test_allocator_invariants_under_churn(policy, steps):
+    alloc = Allocator(GEOM, policy=policy, retention_s=_RETENTION)
+    live = []
+    for i, (bits, life, do_free) in enumerate(steps):
+        p = alloc.place(f"t{i}", bits, now=i * 1e-6,
+                        expected_lifetime_s=life)
+        if p.offchip:
+            # spilled whole: no words taken anywhere
+            assert not p.spans
+            assert f"t{i}" in alloc.spilled
+        else:
+            # placement covers the tensor exactly, once
+            assert sum(w for _, w in p.spans) == GEOM.words_for(bits)
+            assert len({b for b, _ in p.spans}) == len(p.spans)
+            live.append(f"t{i}")
+        _check_invariants(alloc)
+        if do_free and live:
+            alloc.free(live.pop(0), now=i * 1e-6)
+            _check_invariants(alloc)
+    # frees return all words
+    for t in live:
+        alloc.free(t, now=1.0)
+    assert alloc.used_bits == 0
+    assert all(b.used_words == 0 and not b.resident for b in alloc.banks)
+
+
+@pytest.mark.parametrize("policy", ALLOC_POLICIES)
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(min_value=1, max_value=58 * 400),
+                      min_size=1, max_size=30))
+def test_allocator_capacity_is_a_hard_ceiling(policy, sizes):
+    """Even without frees, over-subscription spills — never over-allocates."""
+    alloc = Allocator(GEOM, policy=policy,
+                      retention_s=ed.retention_s(60.0))
+    total_placed = 0
+    for i, bits in enumerate(sizes):
+        p = alloc.place(f"t{i}", bits, now=0.0)
+        if not p.offchip:
+            total_placed += GEOM.words_for(bits)
+        assert alloc.used_bits <= GEOM.total_bits
+        _check_invariants(alloc)
+    assert total_placed == sum(b.used_words for b in alloc.banks)

@@ -3,6 +3,7 @@ import math
 
 import pytest
 
+from repro import sim
 from repro.core import edram as ed, hwmodel as hw, lifetime as lt, schedule as sc
 
 
@@ -83,25 +84,24 @@ def test_array_utilization_sublinear():
 
 def test_camel_iteration_refresh_free_at_paper_scale():
     """Fig 23a: paper-scale Branch-6 blocks stay under 3.4 µs @ 100 °C."""
-    cfg = hw.SystemConfig(temp_c=100.0)
-    blocks = _blocks(6, batch=1, spatial=7, cb=32, ck=64)
-    rep = hw.iteration(cfg, blocks, reversible=True)
+    arm = sim.Arm(name="camel", system=hw.SystemConfig(temp_c=100.0),
+                  blocks=tuple(_blocks(6, batch=1, spatial=7, cb=32, ck=64)))
+    rep = sim.run(arm)
     assert rep.refresh_free, rep.max_lifetime_s
 
 
 def test_eta_advantage_over_sram_only():
     """Fig 24(b): DuDNN+CAMEL ≥2× lower ETA than FR+SRAM-only."""
-    blocks = _blocks(6, batch=48, spatial=7, cb=64, ck=256)
-    camel = hw.tta_eta(hw.SystemConfig(), blocks, 1000, reversible=True)
-    sram = hw.tta_eta(hw.SRAM_ONLY, blocks, 1000, reversible=False)
-    assert sram["eta_j"] / camel["eta_j"] >= 2.0, (
-        sram["eta_j"], camel["eta_j"])
-    assert sram["tta_s"] / camel["tta_s"] > 1.0
+    wl = dict(n_blocks=6, batch=48, spatial=7, c_branch=64, c_backbone=256)
+    camel = sim.run(sim.get_arm("DuDNN+CAMEL").with_workload(**wl))
+    sram = sim.run(sim.get_arm("FR+SRAM").with_workload(**wl))
+    assert sram.eta_j / camel.eta_j >= 2.0, (sram.eta_j, camel.eta_j)
+    assert sram.tta_s / camel.tta_s > 1.0
 
 
 def test_irreversible_spills_offchip():
-    blocks = _blocks(6, batch=48, spatial=7, cb=64, ck=256)
-    rep = hw.iteration(hw.SRAM_ONLY, blocks, reversible=False)
+    wl = dict(n_blocks=6, batch=48, spatial=7, c_branch=64, c_backbone=256)
+    rep = sim.run(sim.get_arm("FR+SRAM").with_workload(**wl))
     assert rep.offchip_bits > 0
-    rev = hw.iteration(hw.SystemConfig(), blocks, reversible=True)
+    rev = sim.run(sim.get_arm("DuDNN+CAMEL").with_workload(**wl))
     assert rev.offchip_bits == 0

@@ -5,6 +5,7 @@ import random
 
 import pytest
 
+from repro import sim
 from repro.core import edram as ed, hwmodel as hw, lifetime as lt, \
     schedule as sc
 from repro.memory import (Allocator, BankGeometry, RefreshScheduler, replay,
@@ -16,9 +17,11 @@ def _blocks(n=6, batch=48, spatial=7, cb=48, ck=160):
 
 
 def _iteration(temp=60.0, policy="selective", alloc="lifetime", **kw):
-    return hw.iteration(
-        hw.SystemConfig(temp_c=temp, refresh_policy=policy,
-                        alloc_policy=alloc), _blocks(**kw), reversible=True)
+    return sim.run(sim.Arm(
+        name="test", system=hw.SystemConfig(temp_c=temp,
+                                            refresh_policy=policy,
+                                            alloc_policy=alloc),
+        blocks=tuple(_blocks(**kw)), reversible=True))
 
 
 # ---------------------------------------------------------------- geometry
@@ -184,8 +187,9 @@ def test_controller_matches_scalar_oracle_within_5pct():
     block configs (refresh-free operating point)."""
     for nb, batch, cb, ck in [(6, 48, 48, 160), (4, 48, 32, 64),
                               (6, 1, 32, 64)]:
-        rep = hw.iteration(hw.SystemConfig(temp_c=60.0),
-                           _blocks(nb, batch, 7, cb, ck), reversible=True)
+        rep = sim.run(sim.Arm(name="test",
+                              system=hw.SystemConfig(temp_c=60.0),
+                              blocks=tuple(_blocks(nb, batch, 7, cb, ck))))
         assert rep.controller is not None
         assert rep.scalar_memory_j > 0
         err = abs(rep.memory_j - rep.scalar_memory_j) / rep.scalar_memory_j
@@ -194,7 +198,8 @@ def test_controller_matches_scalar_oracle_within_5pct():
 
 def test_controller_read_write_bits_match_schedule():
     blocks = _blocks(4)
-    rep = hw.iteration(hw.SystemConfig(), blocks, reversible=True)
+    rep = sim.run(sim.Arm(name="test", system=hw.SystemConfig(),
+                          blocks=tuple(blocks)))
     c = rep.controller
     fwd, bwd = sc.simulate_training_iteration(
         blocks, lt.array_throughput(6, 500e6,
@@ -219,14 +224,8 @@ def test_first_fit_stalls_at_least_as_much_as_striping():
 
 def test_offchip_bw_is_configurable():
     """Satellite: the magic 34e9 became SystemConfig.offchip_bw_bps."""
-    blocks = _blocks()
-    slow = hw.iteration(hw.SystemConfig(
-        name="SRAM-only", array=4, use_edram=False,
-        onchip_bits=4 * 48 * 1024 * 8, offchip_bw_bps=1e9),
-        blocks, reversible=False)
-    fast = hw.iteration(hw.SystemConfig(
-        name="SRAM-only", array=4, use_edram=False,
-        onchip_bits=4 * 48 * 1024 * 8, offchip_bw_bps=1e12),
-        blocks, reversible=False)
+    fr = sim.get_arm("FR+SRAM")
+    slow = sim.run(fr.with_system(offchip_bw_bps=1e9))
+    fast = sim.run(fr.with_system(offchip_bw_bps=1e12))
     assert slow.offchip_bits == fast.offchip_bits > 0
     assert slow.latency_s > fast.latency_s

@@ -1,0 +1,245 @@
+"""The unified arm/pipeline API (repro.sim): registry, staged pipeline,
+JSON round-trip, the FR/SRAM arm through the trace-driven controller with
+its scalar oracle, refresh energy split, and the hwmodel deprecation
+shims."""
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro import sim
+from repro.core import edram as ed, hwmodel as hw
+
+PAPER_ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL")
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_has_the_four_paper_arms():
+    assert set(PAPER_ARMS) <= set(sim.arms())
+    assert sim.get_arm("DuDNN+CAMEL").reversible
+    assert not sim.get_arm("FR+SRAM").reversible
+    assert not sim.get_arm("FR+SRAM").system.use_edram
+    assert sim.get_arm("CA+CAMEL").iters_to_target == sim.ITERS_CHAIN
+    assert sim.get_arm("BO+CAMEL").iters_to_target is None
+
+
+def test_get_arm_unknown_name_lists_registered():
+    with pytest.raises(KeyError, match="DuDNN"):
+        sim.get_arm("nope")
+
+
+def test_register_arm_refuses_silent_overwrite():
+    arm = sim.get_arm("DuDNN+CAMEL")
+    with pytest.raises(ValueError, match="already registered"):
+        sim.register_arm(arm)
+
+
+def test_workload_spec_resolves_blocks():
+    arm = sim.get_arm("DuDNN+CAMEL").with_workload(n_blocks=3, batch=8)
+    blocks = arm.resolve_blocks()
+    assert len(blocks) == 3 and blocks[0].f1.batch == 8
+    explicit = dataclasses.replace(arm, blocks=blocks, workload=None)
+    assert explicit.resolve_blocks() == blocks
+    with pytest.raises(ValueError, match="unknown workload kind"):
+        sim.WorkloadSpec(kind="resnet").blocks()
+
+
+# ------------------------------------------------- every arm, one pipeline
+
+@pytest.mark.parametrize("name", PAPER_ARMS)
+def test_every_arm_replays_through_the_controller(name):
+    rep = sim.run(sim.get_arm(name))
+    assert rep.controller is not None
+    assert rep.memory["mode"] == "controller"
+    assert rep.energy_j > 0 and rep.latency_s > 0
+    # convergence scaling: tta = latency × iters (None for BO)
+    if rep.iters_to_target:
+        assert rep.tta_s == pytest.approx(
+            rep.latency_s * rep.iters_to_target)
+    else:
+        assert rep.tta_s is None and rep.eta_j is None
+
+
+def test_fr_arm_controller_matches_scalar_oracle_within_5pct():
+    """Acceptance: the ≤5% oracle now holds on the FR arm too (the
+    workloads where the streamed working set fits on-chip — all four
+    Fig 24 archs)."""
+    for nb, cb, ck in [(6, 48, 160), (4, 32, 64), (5, 40, 96),
+                       (6, 48, 128)]:
+        rep = sim.run(sim.get_arm("FR+SRAM").with_workload(
+            n_blocks=nb, batch=48, spatial=7, c_branch=cb, c_backbone=ck))
+        assert rep.controller is not None
+        assert rep.scalar_memory_j > 0
+        assert rep.oracle_rel_err < 0.05, (nb, cb, ck, rep.oracle_rel_err)
+        # the SRAM baseline really spills: whole-iteration buffers go
+        # off-chip once out, once back
+        assert rep.offchip_bits > 0
+        assert rep.memory["spilled"]
+        assert rep.memory["refresh_j"] == 0.0     # SRAM never refreshes
+        assert len(rep.memory["banks"]) == rep.config["system"]["sram_banks"]
+
+
+def test_fr_buffers_spill_store_plus_load():
+    """Each spilled whole-iteration buffer pays exactly one store + one
+    load of its bits."""
+    rep = sim.run(sim.get_arm("FR+SRAM"))
+    ctrl = rep.controller
+    spilled = set(ctrl.spilled_tensors)
+    assert spilled and all(t.startswith("sv") for t in spilled)
+    blocks = sim.get_arm("FR+SRAM").resolve_blocks()
+    act_bits = blocks[0].f1.batch * blocks[0].f1.c_out * \
+        blocks[0].f1.width * blocks[0].f1.height * hw.FP16_BITS
+    assert rep.offchip_bits == pytest.approx(2 * len(spilled) * act_bits)
+
+
+def test_reversible_arms_identical_per_iteration():
+    """CA/BO share DuDNN's hardware and pattern; only convergence differs."""
+    dd, ca, bo = (sim.run(sim.get_arm(n))
+                  for n in ("DuDNN+CAMEL", "CA+CAMEL", "BO+CAMEL"))
+    assert dd.latency_s == ca.latency_s == bo.latency_s
+    assert dd.energy_j == ca.energy_j == bo.energy_j
+    assert ca.eta_j == pytest.approx(dd.eta_j * sim.ITERS_CHAIN
+                                     / sim.ITERS_TARGET)
+
+
+def test_sweep_returns_one_report_per_arm():
+    arms = [sim.get_arm(n) for n in PAPER_ARMS]
+    reports = sim.sweep(arms)
+    assert [r.arm for r in reports] == list(PAPER_ARMS)
+
+
+# ------------------------------------------------------- report round-trip
+
+def test_report_roundtrips_through_json():
+    for name in ("DuDNN+CAMEL", "FR+SRAM"):
+        rep = sim.run(sim.get_arm(name))
+        wire = json.dumps(rep.to_dict())
+        back = sim.ArmReport.from_dict(json.loads(wire))
+        assert back == rep                 # controller excluded from ==
+        assert back.config["system"]["onchip_bits"] == \
+            rep.config["system"]["onchip_bits"]
+        assert back.memory["banks"] == rep.memory["banks"]
+
+
+def test_report_config_is_fully_resolved():
+    rep = sim.run(sim.get_arm("FR+SRAM").with_workload(n_blocks=4))
+    cfg = rep.config
+    assert cfg["workload"]["n_blocks"] == 4
+    assert cfg["system"]["use_edram"] is False
+    assert cfg["reversible"] is False
+    # explicit blocks serialize too
+    arm = sim.Arm(name="explicit", blocks=sim.WorkloadSpec().blocks(),
+                  workload=None, iters_to_target=None)
+    rep2 = sim.run(arm)
+    assert rep2.config["blocks"][0]["f1"]["batch"] == 48
+
+
+# ------------------------------------------------------- pluggable stages
+
+def test_pipeline_stage_replacement_and_insertion():
+    calls = []
+
+    def probe(arm, ctx):
+        calls.append((arm.name, ctx.controller is not None))
+
+    pipe = sim.DEFAULT_PIPELINE.insert_after("memory", "probe", probe)
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL"), pipeline=pipe)
+    assert calls == [("DuDNN+CAMEL", True)]
+    assert rep.controller is not None
+
+    def no_controller(arm, ctx):
+        ctx.controller = None              # fall back to the scalar path
+
+    scalar_pipe = sim.DEFAULT_PIPELINE.with_stage("memory", no_controller)
+    rep2 = sim.run(sim.get_arm("DuDNN+CAMEL"), pipeline=scalar_pipe)
+    assert rep2.controller is None
+    assert rep2.memory["mode"] == "scalar"
+    assert rep2.memory_j == pytest.approx(rep2.scalar_memory_j)
+
+    with pytest.raises(KeyError, match="no stage"):
+        sim.DEFAULT_PIPELINE.with_stage("nope", probe)
+
+
+def test_use_controller_false_takes_scalar_path():
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL").with_system(
+        use_controller=False))
+    assert rep.controller is None
+    assert rep.memory_j == pytest.approx(rep.scalar_memory_j)
+
+
+# ------------------------------------------------------ refresh split (sat)
+
+def test_refresh_split_defaults_preserve_aggregate():
+    cfg = ed.EDRAMConfig()
+    assert cfg.refresh_read_pj + cfg.refresh_restore_pj == pytest.approx(
+        cfg.refresh_pj_per_bit)
+    assert cfg.refresh_total_pj == pytest.approx(cfg.refresh_pj_per_bit)
+    # one side given: the other is the remainder of the aggregate
+    half = ed.EDRAMConfig(refresh_restore_pj_per_bit=0.015)
+    assert half.refresh_read_pj == pytest.approx(0.005)
+    assert half.refresh_total_pj == pytest.approx(0.020)
+
+
+def _hot_always(edram=None):
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, refresh_policy="always")
+    if edram is not None:
+        arm = arm.with_system(edram=edram)
+    return sim.run(arm)
+
+
+def test_refresh_split_threads_through_controller():
+    rep = _hot_always()
+    m = rep.memory
+    assert m["refresh_j"] > 0
+    assert m["refresh_read_j"] + m["refresh_restore_j"] == pytest.approx(
+        m["refresh_j"])
+    # doubling only the restore energy raises refresh cost by its share
+    boosted = _hot_always(ed.EDRAMConfig(
+        refresh_read_pj_per_bit=ed.EDRAMConfig().refresh_read_pj,
+        refresh_restore_pj_per_bit=2 * ed.EDRAMConfig().refresh_restore_pj))
+    assert boosted.memory["refresh_restore_j"] == pytest.approx(
+        2 * m["refresh_restore_j"])
+    assert boosted.memory["refresh_read_j"] == pytest.approx(
+        m["refresh_read_j"])
+
+
+# ------------------------------------------------------- deprecation shims
+
+def test_hw_iteration_shim_warns_and_matches_sim_run():
+    blocks = sim.WorkloadSpec().blocks()
+    with pytest.warns(DeprecationWarning, match="repro.sim.run"):
+        legacy = hw.iteration(hw.SystemConfig(), blocks, reversible=True)
+    rep = sim.run(sim.Arm(name="CAMEL", system=hw.SystemConfig(),
+                          blocks=blocks, workload=None,
+                          iters_to_target=None))
+    assert legacy.latency_s == rep.latency_s
+    assert legacy.energy_j == rep.energy_j
+    assert legacy.memory_j == rep.memory_j
+    assert legacy.refresh_free == rep.refresh_free
+    assert legacy.offchip_bits == rep.offchip_bits
+    assert legacy.scalar_memory_j == rep.scalar_memory_j
+
+
+def test_sram_only_shim_warns_and_matches_registry():
+    with pytest.warns(DeprecationWarning, match="FR\\+SRAM"):
+        legacy = hw.SRAM_ONLY
+    assert legacy == sim.get_arm("FR+SRAM").system
+
+
+def test_tta_eta_shim_warns_and_matches_report():
+    blocks = sim.WorkloadSpec().blocks()
+    with pytest.warns(DeprecationWarning, match="iters_to_target"):
+        legacy = hw.tta_eta(hw.SystemConfig(), blocks, 1000)
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL"))
+    assert legacy["tta_s"] == pytest.approx(rep.tta_s)
+    assert legacy["eta_j"] == pytest.approx(rep.eta_j)
+
+
+def test_sim_api_emits_no_deprecation_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sim.run(sim.get_arm("FR+SRAM"))
+        sim.run(sim.get_arm("DuDNN+CAMEL"))
