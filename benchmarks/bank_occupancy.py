@@ -7,6 +7,10 @@ Each row simulates one training iteration of a seed DuDNN config
 pipeline — the trace replays through ``repro.memory`` — and
 cross-validates the controller totals against the scalar ``edram_energy``
 oracle at the refresh-free operating point.
+
+``run(timing=...)`` selects the memory stall model; the
+``refresh_hiding`` row always compares both (timeline must strictly cut
+refresh stall vs additive at identical refresh energy).
 """
 from __future__ import annotations
 
@@ -27,7 +31,33 @@ def _arm(label: str, workload: sim.WorkloadSpec, **system) -> sim.Arm:
                    workload=workload, reversible=True, iters_to_target=None)
 
 
-def run() -> list:
+def _hiding_row() -> dict:
+    """Refresh hiding at the hot operating point: the timeline model must
+    strictly cut refresh stall vs additive at (bit-)identical refresh
+    energy — this row always runs both timings to compare."""
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime")
+    add = sim.run(arm, timing="additive")
+    tml = sim.run(arm, timing="timeline")
+    dj = abs(tml.memory["refresh_j"] - add.memory["refresh_j"])
+    rel = dj / add.memory["refresh_j"] if add.memory["refresh_j"] else 0.0
+    return {
+        "row": (f"bank_occupancy/refresh_hiding/T100,"
+                f"{tml.latency_s*1e6:.1f},"
+                f"additive_refresh_stall_us={add.refresh_stall_s*1e6:.2f};"
+                f"timeline_refresh_stall_us={tml.refresh_stall_s*1e6:.2f};"
+                f"hidden={tml.timeline['pulses_hidden']}"
+                f"/{tml.timeline['pulses']};"
+                f"hidden_j={tml.refresh_hidden_j:.3e};"
+                f"stall_decreases="
+                f"{tml.refresh_stall_s < add.refresh_stall_s};"
+                f"refresh_j_rel_err={rel:.4f}"),
+        "arm": "DuDNN+CAMEL",
+        "config": tml.config,
+    }
+
+
+def run(timing=None) -> list:
     rows: list = []
     for label, nb, batch, cb, ck in CONFIGS:
         wl = sim.WorkloadSpec(n_blocks=nb, batch=batch, spatial=7,
@@ -37,7 +67,8 @@ def run() -> list:
                 per_policy = {
                     pol: sim.run(_arm(label, wl, array=array, temp_c=temp,
                                       refresh_policy=pol,
-                                      alloc_policy="lifetime"))
+                                      alloc_policy="lifetime"),
+                                 timing=timing)
                     for pol in ("none", "selective", "always")}
                 sel = per_policy["selective"].memory
                 alw = per_policy["always"].memory
@@ -65,7 +96,7 @@ def run() -> list:
                 })
         # oracle cross-validation at the refresh-free point: the replayed
         # totals must match the scalar edram_energy arithmetic within 5%
-        rep = sim.run(_arm(label, wl, temp_c=60.0))
+        rep = sim.run(_arm(label, wl, temp_c=60.0), timing=timing)
         rows.append({
             "row": (f"bank_occupancy/{label}/oracle,0,"
                     f"controller_j={rep.memory_j:.4e};"
@@ -78,7 +109,8 @@ def run() -> list:
     # the FR/SRAM arm replays through the same controller now; assert its
     # oracle too (ROADMAP "irreversible arm still scalar" follow-up closed)
     fr = sim.run(sim.get_arm("FR+SRAM").with_workload(
-        n_blocks=6, batch=48, spatial=7, c_branch=48, c_backbone=160))
+        n_blocks=6, batch=48, spatial=7, c_branch=48, c_backbone=160),
+        timing=timing)
     rows.append({
         "row": (f"bank_occupancy/FR+SRAM/oracle,0,"
                 f"controller_j={fr.memory_j:.4e};"
@@ -89,9 +121,11 @@ def run() -> list:
         "arm": "FR+SRAM",
         "config": fr.config,
     })
+    rows.append(_hiding_row())
     rows.append("bank_occupancy/claim,0,"
                 "paper=selective refresh skips refresh-free banks (Fig 23) "
-                "and beats always-refresh energy (Fig 24)")
+                "and beats always-refresh energy (Fig 24); timeline model "
+                "hides refresh in bank-idle windows")
     return rows
 
 

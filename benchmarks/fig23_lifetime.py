@@ -48,4 +48,5 @@ def run() -> list:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    for r in run():
+        print(r["row"] if isinstance(r, dict) else r)

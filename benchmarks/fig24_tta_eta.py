@@ -6,6 +6,10 @@ cross-validation oracle.
 Iteration counts encode the convergence behaviour measured in
 benchmarks/table2 at small scale (CA needs ~2.5× the iterations to the
 target; BO does not reach it — the paper drops those bars too).
+
+``run(timing=..., parallel=...)`` forwards the stall-model selector and
+the process-pool width to ``sim.sweep`` (``benchmarks.run`` exposes them
+as ``--timing`` / ``--parallel``).
 """
 from __future__ import annotations
 
@@ -18,16 +22,22 @@ ARCHS = [
     ("B6+R50", 6, 48, 160),
     ("B6+VGG16", 6, 48, 128),
 ]
+ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL")
 
 
-def run() -> list:
+def run(timing=None, parallel=None) -> list:
     rows: list = []
-    for label, nb, cb, ck in ARCHS:
-        wl = dict(n_blocks=nb, batch=48, spatial=7,
-                  c_branch=cb, c_backbone=ck)
-        reports = {name: sim.run(sim.get_arm(name).with_workload(**wl))
-                   for name in ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL",
-                                "BO+CAMEL")}
+    # one grid sweep: arms × archs, in deterministic order
+    arms = [sim.get_arm(name) for name in ARMS]
+    workloads = [dict(n_blocks=nb, batch=48, spatial=7,
+                      c_branch=cb, c_backbone=ck)
+                 for _, nb, cb, ck in ARCHS]
+    flat = sim.sweep(arms, timing=timing, workloads=workloads,
+                     parallel=parallel)
+    by_arm = {name: flat[i * len(ARCHS):(i + 1) * len(ARCHS)]
+              for i, name in enumerate(ARMS)}
+    for a, (label, nb, cb, ck) in enumerate(ARCHS):
+        reports = {name: by_arm[name][a] for name in ARMS}
         camel, fr, ca = (reports["DuDNN+CAMEL"], reports["FR+SRAM"],
                          reports["CA+CAMEL"])
         for name, rep in reports.items():

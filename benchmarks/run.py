@@ -8,12 +8,19 @@ tracking; suites that simulate a system arm attach the arm name and its
 fully resolved config (``repro.sim.ArmReport.config``), so each record is
 self-describing.  ``--list`` prints the registered suites.
 
+``--timing additive|timeline`` selects the memory stall model and
+``--parallel N`` the ``sim.sweep`` process-pool width; both are forwarded
+to the suites that accept them (currently fig24 and bank_occupancy).
+
     PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
                                             [--json out.json] [--list]
+                                            [--timing timeline]
+                                            [--parallel 4]
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -82,6 +89,13 @@ def main() -> None:
                     help="also write rows as JSON records to PATH")
     ap.add_argument("--list", action="store_true",
                     help="print registered suites and exit")
+    ap.add_argument("--timing", default=None,
+                    choices=["additive", "timeline"],
+                    help="memory stall model for suites that sim arms "
+                         "(default: the sim default, timeline)")
+    ap.add_argument("--parallel", default=None, type=int, metavar="N",
+                    help="sim.sweep process-pool width for suites that "
+                         "support it")
     args = ap.parse_args()
 
     if args.list:
@@ -109,7 +123,12 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            for row in SUITES[name]():
+            # forward --timing/--parallel to suites whose run() accepts them
+            accepted = inspect.signature(SUITES[name]).parameters
+            kwargs = {k: v for k, v in (("timing", args.timing),
+                                        ("parallel", args.parallel))
+                      if v is not None and k in accepted}
+            for row in SUITES[name](**kwargs):
                 emit(row)
             emit(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},ok")
         except Exception as e:

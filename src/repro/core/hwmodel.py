@@ -18,8 +18,10 @@ convergence behaviour when a full training run is out of scope.
     behind ``sim.run(arm)`` that routes *every* arm (including FR/SRAM)
     through the trace-driven memory controller.  ``iteration()`` /
     ``tta_eta()`` / ``SRAM_ONLY`` remain as thin shims that emit
-    ``DeprecationWarning`` and delegate; ``SystemConfig`` stays canonical
-    here.
+    ``DeprecationWarning`` with ``stacklevel=2`` (the warning points at
+    *your* call site, including for the module-level ``SRAM_ONLY``
+    attribute, via ``__getattr__``) and delegate; ``SystemConfig`` stays
+    canonical here.  Migration recipes: ``docs/sim-api.md``.
 """
 from __future__ import annotations
 

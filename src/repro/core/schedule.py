@@ -53,12 +53,21 @@ class Op:
 
 @dataclasses.dataclass
 class SimResult:
+    """One simulated op stream: lifetimes/traffic in **bits** and
+    **seconds** on the unconstrained (back-to-back) op timeline.
+
+    ``schedule`` is the ordered ``[(op name, start_s, end_s), ...]``
+    execution record — the closed-loop timeline model
+    (``repro.sim.timeline``) walks it and pushes ops back on bank/port
+    conflicts; ``trace`` carries the per-tensor :class:`TraceEvent`
+    stream the memory controller replays.
+    """
     lifetimes: dict            # tensor -> seconds between write & last read
     peak_live_bits: float
     read_bits: float
     write_bits: float
-    total_time: float
-    schedule: list
+    total_time: float          # seconds; sum of op durations
+    schedule: list             # [(op name, start_s, end_s), ...] in order
     trace: list = dataclasses.field(default_factory=list)  # TraceEvents
 
     @property

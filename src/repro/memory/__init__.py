@@ -7,15 +7,26 @@ event-driven controller: tensors are placed into 58-bit-word banks
 whose resident data dies before retention (``refresh``) — and the whole
 thing is driven by memory traces emitted by ``core.schedule.simulate()``
 (``trace``).
+
+Two stall models finish a replayed trace: :func:`replay` (additive —
+per-op port overshoot summed, every refresh pulse serializes) and the
+closed-loop event-interleaved engine in ``repro.sim.timeline``, which
+builds on :func:`replay_core`, the per-bank busy intervals
+(``BankState.occupy_port`` / ``idle_window``) and the deadline-driven
+pulse placement (``RefreshScheduler.place_pulses``).
 """
 from repro.memory.banks import BankGeometry, BankState, port_service_s
 from repro.memory.allocator import ALLOC_POLICIES, Allocator, Placement
-from repro.memory.refresh import REFRESH_POLICIES, RefreshScheduler
-from repro.memory.trace import (BankReport, ControllerReport, TraceEvent,
-                                merge_traces, replay)
+from repro.memory.refresh import (REFRESH_POLICIES, PulsePlacement,
+                                  RefreshDecision, RefreshScheduler)
+from repro.memory.trace import (BankReport, ControllerReport, ReplayCore,
+                                TraceEvent, build_report, merge_traces,
+                                replay, replay_core)
 
 __all__ = [
     "ALLOC_POLICIES", "Allocator", "BankGeometry", "BankReport", "BankState",
-    "ControllerReport", "Placement", "REFRESH_POLICIES", "RefreshScheduler",
-    "TraceEvent", "merge_traces", "port_service_s", "replay",
+    "ControllerReport", "Placement", "PulsePlacement", "REFRESH_POLICIES",
+    "RefreshDecision", "RefreshScheduler", "ReplayCore", "TraceEvent",
+    "build_report", "merge_traces", "port_service_s", "replay",
+    "replay_core",
 ]

@@ -95,17 +95,35 @@ class Allocator:
               expected_lifetime_s: Optional[float] = None,
               lifetime_scale: float = 1.0,
               reserve_words: int = 0) -> Placement:
-        """Allocate ``tensor``; spills off-chip when capacity is exceeded.
+        """Allocate ``tensor`` into banks; spills the *whole* tensor
+        off-chip when capacity is exceeded (partial spills would split a
+        BFP group's shared exponent from its mantissas).
 
-        ``lifetime_scale`` converts this tensor's residency window into a
-        data lifetime for the refresh bookkeeping (1/batch for per-sample
-        streamed tensors, 1.0 for whole-iteration buffers).
+        Args:
+            tensor: unique name; placing an already-placed tensor raises
+                ``ValueError`` (use :meth:`rewrite` for overwrites).
+            bits: storage footprint in **bits** (already per-sample
+                scaled by the caller when the tensor streams); rounded
+                up to whole 58-bit words.
+            now: placement time in **seconds** on the trace timeline.
+            expected_lifetime_s: predicted write→free window in
+                **seconds** (data lifetime, i.e. already
+                ``lifetime_scale``-scaled); steers the ``lifetime``
+                coloring policy.  ``None`` means unknown → treated as
+                short-lived.
+            lifetime_scale: residency-to-data-lifetime factor recorded
+                on the bank residency (1/batch for per-sample streamed
+                tensors, 1.0 for whole-iteration buffers).
+            reserve_words: headroom floor in **words** this placement
+                must leave free: the trace replay passes the streamed
+                working set's remaining peak when placing
+                whole-iteration buffers, so a low-priority buffer spills
+                instead of later evicting the dataflow's live tensors.
 
-        ``reserve_words`` is a headroom floor this placement must leave
-        free: the trace replay passes the streamed working set's remaining
-        peak when placing whole-iteration buffers, so a low-priority
-        buffer spills instead of later evicting the dataflow's live
-        tensors.
+        Returns:
+            The :class:`Placement` — ``spans`` of ``(bank index,
+            words)``, or empty spans (``offchip == True``) on spill.
+            Spills also increment ``spill_bits``/``spilled``.
         """
         if tensor in self.placements:
             raise ValueError(f"{tensor} already placed")

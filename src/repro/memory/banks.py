@@ -68,7 +68,16 @@ class _Residency:
 
 
 class BankState:
-    """Occupancy, residency lifetimes, and traffic counters for one bank."""
+    """Occupancy, residency lifetimes, and traffic counters for one bank.
+
+    Besides the occupancy/refresh bookkeeping, a bank records the *port
+    busy intervals* the closed-loop timeline model feeds it
+    (:meth:`occupy_port`): time spans during which one of its ports is
+    moving words for an op.  :meth:`idle_window` answers the refresh
+    scheduler's placement query — "is there a gap of ``need_s`` seconds
+    before this pulse's deadline?" — which is what lets refresh hide
+    under compute instead of serializing against it.
+    """
 
     def __init__(self, index: int, geometry: BankGeometry):
         self.index = index
@@ -85,9 +94,60 @@ class BankState:
         #                                  lifetime, see _Residency.scale)
         self.refresh_count = 0
         self.refresh_bits = 0.0
+        self.refresh_hidden = 0          # pulses placed into idle windows
         # ∫ occupied_bits dt — refresh energy integrates this
         self.occ_bit_s = 0.0
         self._last_t = 0.0
+        # port busy intervals [(start_s, end_s), ...] recorded by the
+        # timeline model's closed-loop walk; kept sorted and merged
+        self._busy: list[tuple[float, float]] = []
+
+    # -- port timeline (closed-loop timing model) ------------------------
+    def occupy_port(self, start: float, end: float) -> None:
+        """Record that a port of this bank is busy over ``[start, end)``
+        seconds.  Calls must arrive with non-decreasing ``start`` (the
+        timeline walk is time-ordered); overlapping or adjacent intervals
+        are merged in place."""
+        if end <= start:
+            return
+        if self._busy and start <= self._busy[-1][1]:
+            s, e = self._busy[-1]
+            self._busy[-1] = (s, max(e, end))
+        else:
+            self._busy.append((start, end))
+
+    @property
+    def busy_s(self) -> float:
+        """Total port-busy time (s) recorded by the timeline walk."""
+        return sum(e - s for s, e in self._busy)
+
+    @property
+    def busy_intervals(self) -> tuple:
+        """The merged ``(start_s, end_s)`` port-busy spans, sorted."""
+        return tuple(self._busy)
+
+    def idle_window(self, lo: float, hi: float,
+                    need_s: float) -> float | None:
+        """Earliest ``t`` in ``[lo, hi - need_s]`` such that
+        ``[t, t + need_s]`` overlaps no recorded busy interval; ``None``
+        when no such gap exists.  ``need_s <= 0`` trivially fits at
+        ``lo``.  This is the refresh scheduler's idle-window query."""
+        if need_s <= 0.0:
+            return lo if hi >= lo else None
+        if lo + need_s > hi:
+            return None
+        t = lo
+        for s, e in self._busy:
+            if e <= t:
+                continue
+            if s >= hi:
+                break
+            if s - t >= need_s:
+                return t
+            t = max(t, e)
+            if t + need_s > hi:
+                return None
+        return t if t + need_s <= hi else None
 
     @property
     def free_words(self) -> int:

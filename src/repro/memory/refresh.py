@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core import edram as ed
 from repro.memory.banks import BankState, port_service_s
@@ -38,11 +38,33 @@ class RefreshDecision:
     bank: int
     refreshed: bool
     needs_refresh: bool        # max resident lifetime ≥ retention
-    refresh_j: float           # read + restore total
+    refresh_j: float           # read + restore total (J)
     refresh_count: int
+    stall_s: float             # port time not hidden under compute (s)
+    refresh_read_j: float = 0.0     # sense phase (J)
+    refresh_restore_j: float = 0.0  # write-back phase (J)
+    # timeline model only: pulses that landed in bank-idle windows, and
+    # the share of refresh_j they carry (energy still paid, time hidden)
+    hidden_count: int = 0
+    refresh_hidden_j: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PulsePlacement:
+    """One refresh pulse placed on the event-interleaved timeline.
+
+    ``deadline_s`` is the end of the pulse's retention interval; the
+    scheduler tries to start the pulse at ``start_s`` inside a bank-idle
+    window before that deadline.  ``hidden`` pulses cost energy but no
+    time; a pulse with no idle window preempts the ports at its deadline
+    and charges ``stall_s`` seconds of serialization.
+    """
+    bank: int
+    index: int                 # 1-based retention tick
+    deadline_s: float
+    start_s: float
+    hidden: bool
     stall_s: float
-    refresh_read_j: float = 0.0     # sense phase
-    refresh_restore_j: float = 0.0  # write-back phase
 
 
 class RefreshScheduler:
@@ -70,36 +92,92 @@ class RefreshScheduler:
         """The per-bank co-design criterion (eq 10 at bank granularity)."""
         return bank.max_resident_s >= self.retention_s
 
+    def would_refresh(self, bank: BankState,
+                      lifetime_scale: float = 1.0) -> bool:
+        """Whether the policy refreshes ``bank`` at all this iteration:
+        the bank must hold data, and under ``selective`` its longest
+        resident data lifetime must reach the retention floor."""
+        needs = (bank.max_resident_s * lifetime_scale) >= self.retention_s
+        held_data = bank.occ_bit_s > 0
+        return held_data and (self.policy == "always"
+                              or (self.policy == "selective" and needs))
+
+    def place_pulses(self, bank: BankState, duration_s: float,
+                     freq_hz: float) -> list[PulsePlacement]:
+        """Deadline-driven pulse placement for the timeline model.
+
+        One pulse per retention tick (``interval_s``) over ``duration_s``
+        seconds of timeline.  Each pulse needs the bank's ports for
+        ``port_service_s(peak_words)`` seconds (read the droop + restore
+        through the same word line); the scheduler looks for a bank-idle
+        window of that length inside the pulse's own retention interval
+        ``[(k-1)·I, min(k·I, duration_s)]``.  A window found ⇒ the pulse
+        is *hidden* under compute (energy charged, zero stall); no window
+        ⇒ the pulse preempts at its deadline and charges its full port
+        time as ``stall_s``.
+
+        Pure query — mutates nothing; feed the result to :meth:`account`
+        via ``placements`` to commit counters and energy.
+        """
+        if duration_s <= 0 or not math.isfinite(self.interval_s):
+            return []
+        pulse_s = port_service_s(bank.peak_words, freq_hz)
+        ticks = math.ceil(duration_s / self.interval_s)
+        out = []
+        for k in range(1, ticks + 1):
+            lo = (k - 1) * self.interval_s
+            deadline = min(k * self.interval_s, duration_s)
+            start = bank.idle_window(lo, deadline, pulse_s)
+            hidden = start is not None
+            out.append(PulsePlacement(
+                bank=bank.index, index=k, deadline_s=deadline,
+                start_s=start if hidden else deadline, hidden=hidden,
+                stall_s=0.0 if hidden else pulse_s))
+        return out
+
     def account(self, banks: Sequence[BankState], duration_s: float,
                 freq_hz: float, refresh_read_pj_per_bit: float,
                 refresh_restore_pj_per_bit: float,
-                lifetime_scale: float = 1.0) -> list[RefreshDecision]:
+                lifetime_scale: float = 1.0,
+                placements: Optional[dict] = None) -> list[RefreshDecision]:
         """Charge refresh energy/stalls for one iteration of ``duration_s``.
 
-        Refresh energy is split into the sense/read phase and the
-        write-back/restore phase (``EDRAMConfig.refresh_read_pj`` /
-        ``refresh_restore_pj``); ``RefreshDecision.refresh_j`` stays the
-        total so existing consumers are unchanged.
+        Args:
+            banks: the ``BankState`` objects the replay populated.
+            duration_s: iteration length in **seconds** (the timeline
+                makespan when the caller uses the timeline model).
+            freq_hz: port clock — one word moves per cycle per port.
+            refresh_read_pj_per_bit: sense-phase energy, **pJ/bit**.
+            refresh_restore_pj_per_bit: write-back energy, **pJ/bit**.
+            lifetime_scale: rescales observed residency durations before
+                the retention comparison.  ``BankState`` already scales
+                residencies per tensor (``_Residency.scale``), so callers
+                that pre-scale pass the default 1.0.
+            placements: optional ``{bank index: [PulsePlacement, ...]}``
+                from :meth:`place_pulses` (the timeline model).  When
+                given, a bank's stall is the sum of its *unhidden* pulse
+                stalls instead of full per-pulse serialization, and the
+                energy of hidden pulses is surfaced as
+                ``refresh_hidden_j``.
 
-        ``lifetime_scale`` rescales observed residency durations before the
-        retention comparison.  Since ``BankState`` now scales residencies
-        per tensor at free/finalize time (``_Residency.scale``), callers
-        that pre-scale should pass the default 1.0.
+        Returns:
+            One :class:`RefreshDecision` per bank (energy in **J**,
+            stalls in **s**).  Refresh energy integrates occupancy over
+            time (∫occ·dt / interval × pJ/bit) and is split into the
+            sense/read and restore/write-back phases;
+            ``RefreshDecision.refresh_j`` stays the total.
 
-        Mutates each bank's ``refresh_count``/``refresh_bits``/``stall_s``
-        counters and returns per-bank decisions.
+        Mutates each bank's ``refresh_count`` / ``refresh_bits`` /
+        ``refresh_hidden`` / ``stall_s`` counters.
         """
         ticks = math.ceil(duration_s / self.interval_s) \
             if duration_s > 0 and math.isfinite(self.interval_s) else 0
         out = []
         for b in banks:
             needs = (b.max_resident_s * lifetime_scale) >= self.retention_s
-            held_data = b.occ_bit_s > 0
-            refreshed = held_data and ticks > 0 and (
-                self.policy == "always"
-                or (self.policy == "selective" and needs))
-            read_j = restore_j = 0.0
-            count = 0
+            refreshed = ticks > 0 and self.would_refresh(b, lifetime_scale)
+            read_j = restore_j = hidden_j = 0.0
+            count = hidden = 0
             stall = 0.0
             if refreshed:
                 # ∫occ·dt / interval — fractional intervals included, so a
@@ -107,18 +185,29 @@ class RefreshScheduler:
                 bit_intervals = b.occ_bit_s / self.interval_s
                 read_j = bit_intervals * refresh_read_pj_per_bit * 1e-12
                 restore_j = bit_intervals * refresh_restore_pj_per_bit * 1e-12
-                count = ticks
-                # each refresh pulse occupies the ports for its resident
-                # words (read + restore through the same word line)
-                words = b.peak_words
-                stall = count * port_service_s(words, freq_hz)
+                pulses = None if placements is None \
+                    else placements.get(b.index, [])
+                if pulses is None:
+                    # additive model: each pulse serializes the ports for
+                    # the bank's resident words
+                    count = ticks
+                    stall = count * port_service_s(b.peak_words, freq_hz)
+                else:
+                    count = len(pulses)
+                    stall = sum(p.stall_s for p in pulses)
+                    hidden = sum(1 for p in pulses if p.hidden)
+                    if count:
+                        hidden_j = (read_j + restore_j) * hidden / count
                 b.refresh_count += count
                 b.refresh_bits += bit_intervals
+                b.refresh_hidden += hidden
                 b.stall_s += stall
             out.append(RefreshDecision(bank=b.index, refreshed=refreshed,
                                        needs_refresh=needs,
                                        refresh_j=read_j + restore_j,
                                        refresh_count=count, stall_s=stall,
                                        refresh_read_j=read_j,
-                                       refresh_restore_j=restore_j))
+                                       refresh_restore_j=restore_j,
+                                       hidden_count=hidden,
+                                       refresh_hidden_j=hidden_j))
         return out

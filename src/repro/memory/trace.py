@@ -58,11 +58,23 @@ class BankReport:
     max_resident_lifetime_s: float  # per-sample (already scaled)
     needs_refresh: bool
     refreshed: bool
+    # timeline model only (zero under the additive model)
+    busy_s: float = 0.0            # port-busy time on the event timeline
+    refresh_hidden: int = 0        # pulses placed into idle windows
 
 
 @dataclasses.dataclass(frozen=True)
 class ControllerReport:
-    """What the controller did over one iteration's trace."""
+    """What the controller did over one iteration's trace.
+
+    ``stall_s`` is the total array-visible serialization added to the
+    schedule: ``conflict_stall_s`` (bank-port contention) plus
+    ``refresh_stall_s`` (refresh pulses that could not hide under
+    compute).  Under the additive model every pulse stalls; under the
+    timeline model only pulses with no bank-idle window do, and the
+    energy of the hidden ones is surfaced as ``refresh_hidden_j``
+    (charged in ``refresh_j`` as always — hiding saves time, not energy).
+    """
     refresh_policy: str
     alloc_policy: str
     temp_c: float
@@ -78,6 +90,11 @@ class ControllerReport:
     spilled_tensors: tuple
     refresh_read_j: float = 0.0    # refresh sense phase (sums to refresh_j
     refresh_restore_j: float = 0.0  # with the restore/write-back phase)
+    timing: str = "additive"       # additive | timeline
+    conflict_stall_s: float = 0.0  # bank/port contention share of stall_s
+    refresh_stall_s: float = 0.0   # unhidden-refresh share of stall_s
+    refresh_hidden_j: float = 0.0  # refresh energy hidden under compute
+    timeline: Optional[dict] = None  # timeline-model summary (JSON-safe)
 
     @property
     def energy(self) -> ed.MemoryEnergy:
@@ -95,29 +112,51 @@ class ControllerReport:
         return all(b.refreshed for b in self.banks if b.needs_refresh)
 
 
-def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
-           temp_c: float, duration_s: float,
-           refresh_policy: str = "selective",
-           alloc_policy: str = "pingpong",
-           freq_hz: float = 500e6,
-           sample_scale: float = 1.0,
-           op_durations: Optional[dict] = None,
-           refresh_guard: float = 1.0,
-           retention_s: Optional[float] = None) -> ControllerReport:
-    """Replay ``events`` through the bank-level controller.
+@dataclasses.dataclass
+class ReplayCore:
+    """The timing-model-independent result of walking a trace: allocator
+    state (placements, occupancy integrals), traffic energies, and the
+    per-op per-bank word tables both stall models consume.
 
-    ``sample_scale`` is the mini-batch size (see module docstring);
-    ``op_durations`` (op name → seconds) enables the bank-conflict model —
-    an op whose per-bank port time exceeds its compute time stalls the
-    array for the difference.
+    Produced by :func:`replay_core`; finished into a
+    :class:`ControllerReport` either by :func:`replay` (additive stalls)
+    or by the event-interleaved engine in ``repro.sim.timeline``.
+    """
+    cfg: ed.EDRAMConfig
+    geom: BankGeometry
+    sched: RefreshScheduler
+    alloc: Allocator
+    refresh_policy: str
+    alloc_policy: str
+    temp_c: float
+    duration_s: float
+    freq_hz: float
+    read_j: float
+    write_j: float
+    offchip_j: float
+    offchip_bits: float
+    op_read_words: dict            # op name -> {bank index: words}
+    op_write_words: dict
 
+
+def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
+                temp_c: float, duration_s: float,
+                refresh_policy: str = "selective",
+                alloc_policy: str = "pingpong",
+                freq_hz: float = 500e6,
+                sample_scale: float = 1.0,
+                refresh_guard: float = 1.0,
+                retention_s: Optional[float] = None) -> ReplayCore:
+    """Walk ``events`` through allocator placement and traffic-energy
+    accounting; returns the :class:`ReplayCore` a stall model finishes.
+
+    ``sample_scale`` is the mini-batch size (see module docstring).
     Events tagged ``buffered`` are whole-iteration buffers (the FR arm's
-    activation stash): they are placed at full batch size — they cannot be
-    streamed sample-by-sample — and their residency counts unscaled
-    against retention.
-
-    ``retention_s`` overrides the temperature-derived retention floor —
-    pass ``math.inf`` to replay an SRAM tier that never refreshes.
+    activation stash): they are placed at full batch size — they cannot
+    be streamed sample-by-sample — and their residency counts unscaled
+    against retention.  ``retention_s`` overrides the
+    temperature-derived retention floor — pass ``math.inf`` to replay an
+    SRAM tier that never refreshes.
     """
     geom = BankGeometry.from_edram(cfg)
     sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
@@ -225,11 +264,103 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     for b in alloc.banks:
         b.finalize(duration_s)
 
+    return ReplayCore(
+        cfg=cfg, geom=geom, sched=sched, alloc=alloc,
+        refresh_policy=refresh_policy, alloc_policy=alloc_policy,
+        temp_c=temp_c, duration_s=duration_s, freq_hz=freq_hz,
+        read_j=read_j, write_j=write_j, offchip_j=offchip_j,
+        offchip_bits=offchip_bits,
+        op_read_words=op_read_words, op_write_words=op_write_words)
+
+
+def build_report(core: ReplayCore, decisions: Sequence, *,
+                 conflict_stall_s: float, timing: str,
+                 timeline: Optional[dict] = None) -> ControllerReport:
+    """Assemble the :class:`ControllerReport` from a finished replay core
+    and the refresh scheduler's per-bank decisions.  Shared by the
+    additive model (:func:`replay`) and the timeline engine
+    (``repro.sim.timeline``)."""
+    refresh_read_j = sum(d.refresh_read_j for d in decisions)
+    refresh_restore_j = sum(d.refresh_restore_j for d in decisions)
+    refresh_stall = sum(d.stall_s for d in decisions)
+    refresh_hidden_j = sum(d.refresh_hidden_j for d in decisions)
+
+    banks = tuple(
+        BankReport(
+            index=b.index, read_bits=b.read_bits, write_bits=b.write_bits,
+            refresh_bits=b.refresh_bits, refresh_count=b.refresh_count,
+            refresh_j=d.refresh_j, stall_s=b.stall_s,
+            peak_words=b.peak_words,
+            peak_occupancy=b.peak_words / core.geom.words_per_bank,
+            max_resident_lifetime_s=b.max_resident_s,
+            needs_refresh=d.needs_refresh, refreshed=d.refreshed,
+            busy_s=b.busy_s, refresh_hidden=d.hidden_count)
+        for b, d in zip(core.alloc.banks, decisions))
+
+    return ControllerReport(
+        refresh_policy=core.refresh_policy, alloc_policy=core.alloc_policy,
+        temp_c=core.temp_c, duration_s=core.duration_s, banks=banks,
+        read_j=core.read_j, write_j=core.write_j,
+        refresh_j=refresh_read_j + refresh_restore_j,
+        offchip_j=core.offchip_j,
+        stall_s=conflict_stall_s + refresh_stall,
+        spill_bits=core.alloc.spill_bits, offchip_bits=core.offchip_bits,
+        spilled_tensors=tuple(core.alloc.spilled),
+        refresh_read_j=refresh_read_j,
+        refresh_restore_j=refresh_restore_j,
+        timing=timing, conflict_stall_s=conflict_stall_s,
+        refresh_stall_s=refresh_stall, refresh_hidden_j=refresh_hidden_j,
+        timeline=timeline)
+
+
+def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
+           temp_c: float, duration_s: float,
+           refresh_policy: str = "selective",
+           alloc_policy: str = "pingpong",
+           freq_hz: float = 500e6,
+           sample_scale: float = 1.0,
+           op_durations: Optional[dict] = None,
+           refresh_guard: float = 1.0,
+           retention_s: Optional[float] = None) -> ControllerReport:
+    """Replay ``events`` through the bank-level controller with the
+    **additive** stall model (the cross-validation baseline; the
+    closed-loop model lives in ``repro.sim.timeline``).
+
+    Args:
+        events: the schedule's :class:`TraceEvent` stream (bits per
+            event; times in seconds on the unconstrained op timeline).
+        cfg: bank geometry + access energies (pJ/bit fields).
+        temp_c: die temperature in °C — sets the retention floor.
+        duration_s: schedule length in seconds.
+        refresh_policy: ``always | none | selective``.
+        alloc_policy: ``pingpong | first_fit | lifetime``.
+        freq_hz: port clock; each bank port moves one word per cycle.
+        sample_scale: the mini-batch size (see module docstring) —
+            streamed tensors are placed at ``bits/sample_scale``.
+        op_durations: op name → seconds; enables the bank-conflict
+            model — an op whose per-bank port time exceeds its compute
+            time stalls the array for the difference, and every refresh
+            pulse serializes against the ports (no hiding).
+        refresh_guard: divides the refresh interval (guard-banding).
+        retention_s: overrides the temperature-derived retention floor —
+            pass ``math.inf`` to replay an SRAM tier that never
+            refreshes.
+
+    Returns:
+        A :class:`ControllerReport` (energies in J, stalls in s) with
+        ``timing="additive"``.
+    """
+    core = replay_core(
+        events, cfg, temp_c=temp_c, duration_s=duration_s,
+        refresh_policy=refresh_policy, alloc_policy=alloc_policy,
+        freq_hz=freq_hz, sample_scale=sample_scale,
+        refresh_guard=refresh_guard, retention_s=retention_s)
+
     # bank-conflict stalls: each bank moves one word/cycle/port; an op is
     # stalled by its most-contended bank beyond its own compute time
     stall_s = 0.0
     if op_durations:
-        for table in (op_read_words, op_write_words):
+        for table in (core.op_read_words, core.op_write_words):
             for op, per_bank in table.items():
                 if not per_bank:
                     continue
@@ -244,34 +375,12 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 extra = max(0.0, port_s - dur)
                 stall_s += extra
                 argmax = max(per_bank, key=per_bank.get)
-                alloc.banks[argmax].stall_s += extra
+                core.alloc.banks[argmax].stall_s += extra
 
     # residencies were scaled per tensor at the bank level, so account()
     # compares them against retention directly (lifetime_scale=1)
-    decisions = sched.account(alloc.banks, duration_s, freq_hz,
-                              cfg.refresh_read_pj, cfg.refresh_restore_pj)
-    refresh_read_j = sum(d.refresh_read_j for d in decisions)
-    refresh_restore_j = sum(d.refresh_restore_j for d in decisions)
-    refresh_stall = sum(d.stall_s for d in decisions)
-
-    banks = tuple(
-        BankReport(
-            index=b.index, read_bits=b.read_bits, write_bits=b.write_bits,
-            refresh_bits=b.refresh_bits, refresh_count=b.refresh_count,
-            refresh_j=d.refresh_j, stall_s=b.stall_s,
-            peak_words=b.peak_words,
-            peak_occupancy=b.peak_words / geom.words_per_bank,
-            max_resident_lifetime_s=b.max_resident_s,
-            needs_refresh=d.needs_refresh, refreshed=d.refreshed)
-        for b, d in zip(alloc.banks, decisions))
-
-    return ControllerReport(
-        refresh_policy=refresh_policy, alloc_policy=alloc_policy,
-        temp_c=temp_c, duration_s=duration_s, banks=banks,
-        read_j=read_j, write_j=write_j,
-        refresh_j=refresh_read_j + refresh_restore_j,
-        offchip_j=offchip_j, stall_s=stall_s + refresh_stall,
-        spill_bits=alloc.spill_bits, offchip_bits=offchip_bits,
-        spilled_tensors=tuple(alloc.spilled),
-        refresh_read_j=refresh_read_j,
-        refresh_restore_j=refresh_restore_j)
+    decisions = core.sched.account(core.alloc.banks, duration_s, freq_hz,
+                                   cfg.refresh_read_pj,
+                                   cfg.refresh_restore_pj)
+    return build_report(core, decisions, conflict_stall_s=stall_s,
+                        timing="additive")

@@ -15,20 +15,33 @@ of them; the scalar closed forms ride along as a cross-validation oracle
 (``ArmReport.oracle_rel_err``).  Reports are plain-dict/JSON
 round-trippable via ``to_dict``/``from_dict``.
 
+Two stall models share the pipeline: ``sim.run(arm)`` defaults to the
+closed-loop event-interleaved **timeline** model (``repro.sim.timeline``
+— refresh pulses hide in bank-idle windows, port overshoot pushes back
+successor ops) and ``sim.run(arm, timing="additive")`` keeps the PR-2
+additive model as a bit-compatible cross-validation baseline.
+``sim.sweep`` fans a grid of arms × workloads × temperatures over a
+process pool (``parallel=N``) with deterministic result ordering.
+
 Custom arms are frozen dataclasses (``sim.Arm``) and can be registered
 (``sim.register_arm``); custom pipelines swap stages
-(``sim.Pipeline.with_stage``) — the hook the planned closed-loop stall
-model uses.
+(``sim.Pipeline.with_stage``) — exactly how the timeline model installs
+itself.  See ``docs/sim-api.md`` for the full reference.
 """
 from repro.sim.arm import (ARM_REGISTRY, ITERS_CHAIN, ITERS_TARGET,
                            WORKLOAD_KINDS, Arm, WorkloadSpec, arms, get_arm,
                            register_arm)
-from repro.sim.pipeline import (DEFAULT_PIPELINE, DEFAULT_STAGES, Pipeline,
-                                SimContext, run, sweep)
+from repro.sim.pipeline import (DEFAULT_PIPELINE, DEFAULT_STAGES,
+                                DEFAULT_TIMING, TIMINGS, Pipeline,
+                                SimContext, resolve_pipeline, run, sweep)
 from repro.sim.report import ArmReport
+from repro.sim.timeline import (TIMELINE_PIPELINE, replay_timeline,
+                                stage_timeline)
 
 __all__ = [
     "ARM_REGISTRY", "Arm", "ArmReport", "DEFAULT_PIPELINE", "DEFAULT_STAGES",
-    "ITERS_CHAIN", "ITERS_TARGET", "Pipeline", "SimContext", "WORKLOAD_KINDS",
-    "WorkloadSpec", "arms", "get_arm", "register_arm", "run", "sweep",
+    "DEFAULT_TIMING", "ITERS_CHAIN", "ITERS_TARGET", "Pipeline",
+    "SimContext", "TIMELINE_PIPELINE", "TIMINGS", "WORKLOAD_KINDS",
+    "WorkloadSpec", "arms", "get_arm", "register_arm", "replay_timeline",
+    "resolve_pipeline", "run", "stage_timeline", "sweep",
 ]

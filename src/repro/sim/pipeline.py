@@ -13,14 +13,19 @@ Every arm flows through the same four stages::
                 oracle, latency/TTA/ETA; assembles the ArmReport
 
 Stages are pluggable: each is a ``(name, fn(arm, ctx))`` pair and
-``Pipeline.with_stage`` / ``insert_after`` produce modified pipelines —
-the planned closed-loop stall model replaces the ``memory`` stage without
-touching the rest (see ROADMAP).
+``Pipeline.with_stage`` / ``insert_after`` produce modified pipelines.
+The closed-loop timeline model (``repro.sim.timeline``) is exactly such a
+replacement: ``DEFAULT_PIPELINE.with_stage("memory", stage_timeline)`` —
+selected by ``sim.run(arm, timing="timeline")``, the default.  The
+additive model (``timing="additive"``) is this module's ``stage_memory``
+and is kept bit-compatible as a cross-validation baseline.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
+from concurrent.futures import ProcessPoolExecutor
 from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core import edram as ed
@@ -48,6 +53,9 @@ class SimContext:
     combined: object = None        # SimResult (irreversible single timeline)
     events: list = dataclasses.field(default_factory=list)
     op_durations: dict = dataclasses.field(default_factory=dict)
+    # the merged op schedule [(name, start_s, end_s), ...] in execution
+    # order — the timeline model walks this
+    op_schedule: list = dataclasses.field(default_factory=list)
     duration_s: float = 0.0
     read_bits: float = 0.0
     write_bits: float = 0.0
@@ -82,6 +90,10 @@ def stage_trace(arm: Arm, ctx: SimContext) -> None:
     if arm.reversible:
         ctx.events, ctx.op_durations, ctx.duration_s = mtr.merge_traces(
             ctx.fwd, ctx.bwd)
+        off = ctx.fwd.total_time
+        ctx.op_schedule = list(ctx.fwd.schedule) + [
+            (name, start + off, end + off)
+            for name, start, end in ctx.bwd.schedule]
         ctx.read_bits = ctx.fwd.read_bits + ctx.bwd.read_bits
         ctx.write_bits = ctx.fwd.write_bits + ctx.bwd.write_bits
         ctx.peak_live_bits = max(ctx.fwd.peak_live_bits,
@@ -94,6 +106,7 @@ def stage_trace(arm: Arm, ctx: SimContext) -> None:
     ctx.events = list(sim.trace)
     ctx.op_durations = {name: end - start
                         for name, start, end in sim.schedule}
+    ctx.op_schedule = list(sim.schedule)
     ctx.duration_s = sim.total_time
     ctx.read_bits = sim.read_bits
     ctx.write_bits = sim.write_bits
@@ -119,16 +132,25 @@ def _sram_mem_config(cfg: hw.SystemConfig) -> ed.EDRAMConfig:
         write_pj_per_bit=cfg.edram.sram_write_pj_per_bit)
 
 
+def memory_config(cfg: hw.SystemConfig):
+    """The controller-replay parameters an arm's system implies:
+    ``(mem_cfg, retention_s, refresh_policy)``.  eDRAM arms replay their
+    own geometry; the SRAM baseline replays the same bank machinery with
+    an infinite retention floor and refresh disabled."""
+    if cfg.use_edram:
+        return cfg.edram, None, cfg.refresh_policy
+    # SRAM holds data indefinitely: infinite retention, never refresh
+    return _sram_mem_config(cfg), math.inf, "none"
+
+
 def stage_memory(arm: Arm, ctx: SimContext) -> None:
-    """Trace-driven replay through the bank-level controller."""
+    """Trace-driven replay through the bank-level controller (additive
+    stall model; the timeline model's stage lives in
+    ``repro.sim.timeline``)."""
     cfg = arm.system
     if not cfg.use_controller:
         return
-    if cfg.use_edram:
-        mem_cfg, retention, policy = cfg.edram, None, cfg.refresh_policy
-    else:
-        # SRAM holds data indefinitely: infinite retention, never refresh
-        mem_cfg, retention, policy = _sram_mem_config(cfg), math.inf, "none"
+    mem_cfg, retention, policy = memory_config(cfg)
     ctx.mem_cfg = mem_cfg
     ctx.controller = mtr.replay(
         ctx.events, mem_cfg, temp_c=cfg.temp_c, duration_s=ctx.duration_s,
@@ -251,6 +273,11 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
         iters_to_target=iters,
         tta_s=latency_s * iters if iters else None,
         eta_j=energy_j * iters if iters else None,
+        timing=ctrl.timing if ctrl is not None else "scalar",
+        refresh_stall_s=ctrl.refresh_stall_s if ctrl is not None else 0.0,
+        refresh_hidden_j=ctrl.refresh_hidden_j if ctrl is not None else 0.0,
+        timeline=(dict(ctrl.timeline)
+                  if ctrl is not None and ctrl.timeline else {}),
         config=_config_dict(arm),
         memory=_memory_dict(ctrl),
         controller=ctrl,
@@ -278,6 +305,7 @@ def _memory_dict(ctrl) -> dict:
         return {"mode": "scalar", "banks": [], "spilled": []}
     return {
         "mode": "controller",
+        "timing": ctrl.timing,
         "refresh_policy": ctrl.refresh_policy,
         "alloc_policy": ctrl.alloc_policy,
         "temp_c": ctrl.temp_c,
@@ -287,13 +315,17 @@ def _memory_dict(ctrl) -> dict:
         "refresh_j": ctrl.refresh_j,
         "refresh_read_j": ctrl.refresh_read_j,
         "refresh_restore_j": ctrl.refresh_restore_j,
+        "refresh_hidden_j": ctrl.refresh_hidden_j,
         "offchip_j": ctrl.offchip_j,
         "stall_s": ctrl.stall_s,
+        "conflict_stall_s": ctrl.conflict_stall_s,
+        "refresh_stall_s": ctrl.refresh_stall_s,
         "spill_bits": ctrl.spill_bits,
         "offchip_bits": ctrl.offchip_bits,
         "refresh_count": ctrl.refresh_count,
         "safe": ctrl.safe,
         "spilled": list(ctrl.spilled_tensors),
+        "timeline": dict(ctrl.timeline) if ctrl.timeline else None,
         "banks": [dataclasses.asdict(b) for b in ctrl.banks],
     }
 
@@ -325,15 +357,30 @@ class Pipeline:
                            f"{', '.join(self.stage_names())}")
 
     def with_stage(self, name: str, fn: Callable) -> "Pipeline":
-        """Replace stage ``name`` with ``fn(arm, ctx)``."""
+        """Replace stage ``name`` with ``fn(arm, ctx)``.
+
+        Args:
+            name: an existing stage name (``schedule`` / ``trace`` /
+                ``memory`` / ``energy`` on the default pipeline);
+                ``KeyError`` if absent.
+            fn: callable ``(arm: Arm, ctx: SimContext) -> None`` that
+                mutates ``ctx`` in place — e.g. set ``ctx.controller`` to
+                a custom ``ControllerReport`` (this is how the timeline
+                model replaces the ``memory`` stage).
+
+        Returns:
+            A new ``Pipeline``; ``self`` is unchanged (frozen).
+        """
         self._require(name)
         return Pipeline(tuple((n, fn if n == name else f)
                               for n, f in self.stages))
 
     def insert_after(self, name: str, new_name: str,
                      fn: Callable) -> "Pipeline":
-        """Insert a new stage right after ``name`` (e.g. a stall model
-        post-processing the controller report before energy accounting)."""
+        """Insert stage ``new_name`` (same ``fn(arm, ctx)`` contract as
+        :meth:`with_stage`) right after ``name`` — e.g. a post-processor
+        that rewrites the controller report before energy accounting.
+        Returns a new ``Pipeline``; ``self`` is unchanged."""
         self._require(name)
         out: list = []
         for n, f in self.stages:
@@ -352,14 +399,109 @@ class Pipeline:
 
 DEFAULT_PIPELINE = Pipeline()
 
+# stall-model names sim.run/sweep resolve; "timeline" is the default
+TIMINGS = ("additive", "timeline")
+DEFAULT_TIMING = "timeline"
 
-def run(arm: Arm, pipeline: Optional[Pipeline] = None) -> ArmReport:
-    """Simulate one arm through the staged pipeline."""
-    report, _ = (pipeline or DEFAULT_PIPELINE).run(arm)
+
+def resolve_pipeline(timing: Optional[str] = None,
+                     pipeline: Optional[Pipeline] = None) -> Pipeline:
+    """The pipeline a ``timing`` name selects: ``"additive"`` is
+    :data:`DEFAULT_PIPELINE`, ``"timeline"`` swaps in the closed-loop
+    memory stage.  An explicit ``pipeline`` wins and excludes
+    ``timing``."""
+    if pipeline is not None:
+        if timing is not None:
+            raise ValueError("pass either pipeline= or timing=, not both")
+        return pipeline
+    timing = DEFAULT_TIMING if timing is None else timing
+    if timing == "additive":
+        return DEFAULT_PIPELINE
+    if timing == "timeline":
+        from repro.sim.timeline import TIMELINE_PIPELINE
+        return TIMELINE_PIPELINE
+    raise ValueError(f"unknown timing {timing!r}; choose from {TIMINGS}")
+
+
+def run(arm: Arm, pipeline: Optional[Pipeline] = None, *,
+        timing: Optional[str] = None) -> ArmReport:
+    """Simulate one arm through the staged pipeline.
+
+    Args:
+        arm: the declarative :class:`~repro.sim.arm.Arm` (workload +
+            ``SystemConfig`` + memory policies).
+        pipeline: explicit stage list; mutually exclusive with
+            ``timing``.
+        timing: stall-model selector — ``"timeline"`` (default; the
+            closed-loop event-interleaved model where refresh hides in
+            bank-idle windows) or ``"additive"`` (per-op overshoot and
+            per-pulse serialization summed; the PR-2-compatible
+            cross-validation baseline).
+
+    Returns:
+        An :class:`~repro.sim.report.ArmReport` — latency/energy in
+        s/J, the controller's per-bank breakdown under ``.memory``, and
+        (timeline model) ``refresh_stall_s`` / ``refresh_hidden_j`` plus
+        the ``.timeline`` makespan summary.
+    """
+    report, _ = resolve_pipeline(timing, pipeline).run(arm)
     return report
 
 
-def sweep(arms: Sequence[Arm],
-          pipeline: Optional[Pipeline] = None) -> list:
-    """Simulate several arms; returns one ArmReport per arm, in order."""
-    return [run(a, pipeline) for a in arms]
+def _expand_grid(arms: Sequence[Arm], workloads, temps) -> list:
+    """``arms × workloads × temps`` as concrete arms, in deterministic
+    (arms-outer, temps-inner) order."""
+    out = []
+    for arm in arms:
+        for wl in (workloads if workloads is not None else (None,)):
+            if wl is None:
+                a = arm
+            elif isinstance(wl, dict):
+                a = arm.with_workload(**wl)
+            else:                       # a WorkloadSpec replaces wholesale
+                a = dataclasses.replace(arm, workload=wl, blocks=None)
+            for t in (temps if temps is not None else (None,)):
+                out.append(a if t is None else a.with_system(temp_c=t))
+    return out
+
+
+def _sweep_one(job: tuple) -> ArmReport:
+    """Process-pool worker: simulate one (arm, timing, pipeline) job.
+    Top-level so it pickles by reference."""
+    arm, timing, pipeline = job
+    return run(arm, pipeline, timing=timing)
+
+
+def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
+          timing: Optional[str] = None,
+          workloads: Optional[Sequence] = None,
+          temps: Optional[Sequence[float]] = None,
+          parallel=None) -> list:
+    """Simulate a grid of arms; one :class:`ArmReport` per grid point.
+
+    Args:
+        arms: the arms to sweep.
+        pipeline: explicit stage list (mutually exclusive with
+            ``timing``); must be picklable (module-level stage
+            functions) when ``parallel`` is used.
+        timing: stall-model selector, as in :func:`run`.
+        workloads: optional workload axis — each entry is either a
+            ``WorkloadSpec`` (replaces the arm's workload) or a dict of
+            ``WorkloadSpec`` field overrides (``with_workload``).
+        temps: optional die-temperature axis (°C, ``with_system``).
+        parallel: ``None``/``0``/``1`` → sequential; ``True`` → one
+            worker per CPU; an int → that many process-pool workers.
+
+    Returns:
+        Reports in deterministic grid order — ``arms`` outermost, then
+        ``workloads``, then ``temps`` — identical regardless of
+        ``parallel`` (results are collected in submission order).
+    """
+    resolve_pipeline(timing, pipeline)      # validate eagerly
+    grid = _expand_grid(arms, workloads, temps)
+    jobs = [(a, timing, pipeline) for a in grid]
+    workers = (os.cpu_count() or 1) if parallel is True else int(parallel or 0)
+    if workers > 1 and len(jobs) > 1:
+        with ProcessPoolExecutor(max_workers=min(workers, len(jobs))) as ex:
+            return list(ex.map(_sweep_one, jobs))
+    return [_sweep_one(j) for j in jobs]

@@ -35,6 +35,18 @@ class ArmReport:
     iters_to_target: Optional[float]
     tta_s: Optional[float]
     eta_j: Optional[float]
+    # which stall model produced stall_s: "additive" (per-op overshoot
+    # summed), "timeline" (closed-loop event-interleaved walk), or
+    # "scalar" (no controller — closed forms only)
+    timing: str = "additive"
+    # refresh time the schedule actually sees (s): under the timeline
+    # model only pulses with no bank-idle window stall; the energy of the
+    # hidden ones is refresh_hidden_j (J) — charged, but costing no time
+    refresh_stall_s: float = 0.0
+    refresh_hidden_j: float = 0.0
+    # timeline-model summary (makespan, pushback, pulse placement counts);
+    # empty dict under additive/scalar timing
+    timeline: dict = dataclasses.field(default_factory=dict)
     # fully resolved inputs and the controller's breakdown, JSON-safe
     config: dict = dataclasses.field(default_factory=dict)
     memory: dict = dataclasses.field(default_factory=dict)
@@ -46,11 +58,13 @@ class ArmReport:
     _SCALARS = ("arm", "reversible", "latency_s", "energy_j", "compute_j",
                 "memory_j", "scalar_memory_j", "oracle_rel_err", "stall_s",
                 "max_lifetime_s", "refresh_free", "peak_live_bits",
-                "offchip_bits", "iters_to_target", "tta_s", "eta_j")
+                "offchip_bits", "iters_to_target", "tta_s", "eta_j",
+                "timing", "refresh_stall_s", "refresh_hidden_j")
 
     def to_dict(self) -> dict:
         """Plain-JSON form (drops the live ``controller`` object)."""
         d = {k: getattr(self, k) for k in self._SCALARS}
+        d["timeline"] = self.timeline
         d["config"] = self.config
         d["memory"] = self.memory
         return d

@@ -1,0 +1,146 @@
+"""Closed-loop, event-interleaved memory timing (``timing="timeline"``).
+
+The additive model (``memory.trace.replay``) charges two kinds of stall
+*independently of when they happen*: an op's port overshoot is summed
+into a global stall total, and every refresh pulse serializes against the
+bank ports.  That is pessimistic in exactly the way CAMEL's pipeline is
+not: on real hardware a refresh pulse fires whenever its bank is idle —
+which, with compute-bound ops touching a few banks at a time, is most of
+the time — and only *preempts* when its retention deadline arrives with
+the bank still busy.
+
+This module replaces the pipeline's ``memory`` stage with a
+discrete-event engine that models that:
+
+1.  **Closed-loop op walk** — ops execute in schedule order on one
+    timeline; an op occupies its banks' ports for their service time
+    (one word/cycle/port) and *pushes back every successor* until both
+    its compute and its slowest port finish.  Per-bank busy intervals
+    are recorded on :class:`~repro.memory.banks.BankState` as it walks.
+2.  **Deadline-driven refresh placement** — for each bank the refresh
+    policy would refresh, one pulse per retention interval is placed
+    into a bank-idle window before its deadline
+    (:meth:`RefreshScheduler.place_pulses`).  A placed pulse is *hidden*:
+    its energy is charged (``refresh_hidden_j``) but it costs no time.
+    Only pulses with no idle window stall (``refresh_stall_s``).
+
+Refresh preemption is charged as a serialized tail rather than re-fed
+into op start times (a second-order effect — an unhidden pulse is rare
+and short next to an op); energy accounting is shared verbatim with the
+additive model, so ``refresh_j``/``read_j``/``write_j`` agree bit-for-bit
+between the two timings and only *time* moves.  The DVFS interaction
+(variable op latency vs idle-window placement) is an open question — see
+ROADMAP.
+"""
+from __future__ import annotations
+
+from repro.memory import trace as mtr
+from repro.memory.banks import port_service_s
+from repro.sim.arm import Arm
+from repro.sim.pipeline import (DEFAULT_PIPELINE, SimContext,
+                                memory_config)
+
+
+def closed_loop_walk(core: mtr.ReplayCore, op_schedule) -> float:
+    """Walk ``op_schedule`` (``[(name, start_s, end_s), ...]`` in
+    execution order) against the replay core's per-op bank-word tables;
+    returns the makespan in seconds.
+
+    Each op starts when its predecessor's compute *and* slowest port
+    finish — port overshoot pushes back every successor instead of being
+    summed into a side total.  Zero-duration ops are elementwise
+    adds/copies fused into the producing MAC op's pipeline (Fig 12):
+    they neither occupy ports nor advance time, matching the additive
+    model's treatment.  Records per-bank busy intervals via
+    ``BankState.occupy_port`` as a side effect.
+    """
+    banks = core.alloc.banks
+    t = 0.0
+    for name, start0, end0 in op_schedule:
+        dur = end0 - start0
+        if dur <= 0.0:
+            continue
+        start = t
+        end = start + dur
+        for table in (core.op_read_words, core.op_write_words):
+            per = table.get(name)
+            if not per:
+                continue
+            for b_idx, words in per.items():
+                busy = port_service_s(words, core.freq_hz)
+                if busy > 0.0:
+                    banks[b_idx].occupy_port(start, start + busy)
+                    end = max(end, start + busy)
+        t = end
+    return t
+
+
+def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
+                    duration_s: float, refresh_policy: str = "selective",
+                    alloc_policy: str = "pingpong", freq_hz: float = 500e6,
+                    sample_scale: float = 1.0, refresh_guard: float = 1.0,
+                    retention_s=None) -> mtr.ControllerReport:
+    """Replay ``events`` with the closed-loop timeline model.
+
+    Same contract as :func:`repro.memory.trace.replay` (energies in J,
+    stalls in s), plus ``op_schedule`` — the ordered
+    ``[(name, start_s, end_s), ...]`` list the engine walks.  The
+    returned report has ``timing="timeline"``, the
+    ``conflict_stall_s``/``refresh_stall_s`` split, ``refresh_hidden_j``,
+    and a JSON-safe ``timeline`` summary (makespan, pulse placement
+    counts, per-bank port-busy time).
+    """
+    core = mtr.replay_core(
+        events, cfg, temp_c=temp_c, duration_s=duration_s,
+        refresh_policy=refresh_policy, alloc_policy=alloc_policy,
+        freq_hz=freq_hz, sample_scale=sample_scale,
+        refresh_guard=refresh_guard, retention_s=retention_s)
+
+    makespan = closed_loop_walk(core, op_schedule)
+    makespan = max(makespan, duration_s)
+    conflict_stall_s = makespan - duration_s
+
+    # place one pulse per retention tick into each refreshed bank's idle
+    # windows on the *pushed-back* timeline
+    placements = {
+        b.index: core.sched.place_pulses(b, makespan, core.freq_hz)
+        for b in core.alloc.banks if core.sched.would_refresh(b)}
+    decisions = core.sched.account(
+        core.alloc.banks, duration_s, core.freq_hz,
+        cfg.refresh_read_pj, cfg.refresh_restore_pj,
+        placements=placements)
+
+    pulses = [p for ps in placements.values() for p in ps]
+    hidden = sum(1 for p in pulses if p.hidden)
+    summary = {
+        "makespan_s": makespan,
+        "schedule_s": duration_s,
+        "conflict_stall_s": conflict_stall_s,
+        "refresh_stall_s": sum(d.stall_s for d in decisions),
+        "pulses": len(pulses),
+        "pulses_hidden": hidden,
+        "port_busy_s": [b.busy_s for b in core.alloc.banks],
+        "ops": sum(1 for _, s, e in op_schedule if e > s),
+    }
+    return mtr.build_report(core, decisions,
+                            conflict_stall_s=conflict_stall_s,
+                            timing="timeline", timeline=summary)
+
+
+def stage_timeline(arm: Arm, ctx: SimContext) -> None:
+    """The pipeline's ``memory`` stage under ``timing="timeline"``:
+    trace-driven replay with event-interleaved timing."""
+    cfg = arm.system
+    if not cfg.use_controller:
+        return
+    mem_cfg, retention, policy = memory_config(cfg)
+    ctx.mem_cfg = mem_cfg
+    ctx.controller = replay_timeline(
+        ctx.events, mem_cfg, op_schedule=ctx.op_schedule,
+        temp_c=cfg.temp_c, duration_s=ctx.duration_s,
+        refresh_policy=policy, alloc_policy=cfg.alloc_policy,
+        freq_hz=cfg.freq_hz, sample_scale=ctx.batch,
+        retention_s=retention)
+
+
+TIMELINE_PIPELINE = DEFAULT_PIPELINE.with_stage("memory", stage_timeline)

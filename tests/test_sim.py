@@ -243,3 +243,20 @@ def test_sim_api_emits_no_deprecation_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         sim.run(sim.get_arm("FR+SRAM"))
         sim.run(sim.get_arm("DuDNN+CAMEL"))
+
+
+def test_shim_warnings_are_attributed_to_the_caller():
+    """stacklevel=2 on every shim: the DeprecationWarning must point at
+    the calling file (this one), not at hwmodel.py — otherwise
+    ``-W error::DeprecationWarning`` users can't find their call site."""
+    blocks = sim.WorkloadSpec(n_blocks=2, batch=4,
+                              c_branch=8, c_backbone=16).blocks()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always", DeprecationWarning)
+        _ = hw.SRAM_ONLY
+        hw.iteration(hw.SystemConfig(), blocks)
+        hw.tta_eta(hw.SystemConfig(), blocks, 10)
+    shim = [w for w in rec if w.category is DeprecationWarning]
+    assert len(shim) == 3
+    for w in shim:
+        assert w.filename == __file__, (w.filename, str(w.message))

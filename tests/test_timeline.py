@@ -1,0 +1,273 @@
+"""The closed-loop event-interleaved timing model (repro.sim.timeline):
+bank idle-window queries, deadline-driven refresh placement, refresh
+hiding under compute, energy invariance across timing models, the PR-2
+additive golden cross-check, and the parallel grid sweep."""
+import math
+
+import pytest
+
+from repro import sim
+from repro.core import edram as ed, hwmodel as hw
+from repro.core.schedule import TraceEvent
+from repro.memory import BankGeometry, BankState, RefreshScheduler, replay
+from repro.sim.timeline import replay_timeline
+
+WORD = ed.EDRAMConfig().word_bits
+
+
+# ------------------------------------------------- bank port busy intervals
+
+def _bank():
+    return BankState(0, BankGeometry(word_bits=58, words_per_bank=100,
+                                     n_banks=1))
+
+
+def test_occupy_port_merges_overlapping_intervals():
+    b = _bank()
+    b.occupy_port(1.0, 2.0)
+    b.occupy_port(1.5, 3.0)          # overlaps -> merged
+    b.occupy_port(4.0, 5.0)
+    b.occupy_port(5.0, 6.0)          # adjacent -> merged
+    b.occupy_port(7.0, 7.0)          # empty -> dropped
+    assert b.busy_intervals == ((1.0, 3.0), (4.0, 6.0))
+    assert b.busy_s == pytest.approx(4.0)
+
+
+def test_idle_window_finds_earliest_gap():
+    b = _bank()
+    b.occupy_port(1.0, 2.0)
+    b.occupy_port(4.0, 5.0)
+    assert b.idle_window(0.0, 10.0, 1.0) == 0.0      # gap before first busy
+    assert b.idle_window(1.5, 10.0, 1.0) == 2.0      # gap between intervals
+    assert b.idle_window(1.5, 10.0, 3.0) == 5.0      # only the tail fits
+    assert b.idle_window(4.2, 4.9, 0.5) is None      # inside a busy span
+    assert b.idle_window(0.0, 0.5, 1.0) is None      # range shorter than need
+    assert b.idle_window(3.0, 10.0, 0.0) == 3.0      # zero-length fits at lo
+
+
+# ------------------------------------------- deadline-driven pulse placement
+
+def test_place_pulses_hides_in_idle_windows_and_stalls_otherwise():
+    b = _bank()
+    b.peak_words = 50                 # pulse = 50 words / 100 Hz = 0.5 s
+    b.occ_bit_s = 1.0
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=2.0)
+    # interval 1: busy [0, 2) -> no window; interval 2: idle -> hides
+    b.occupy_port(0.0, 2.0)
+    pulses = sched.place_pulses(b, duration_s=4.0, freq_hz=100.0)
+    assert [p.hidden for p in pulses] == [False, True]
+    assert pulses[0].stall_s == pytest.approx(0.5)
+    assert pulses[0].start_s == pytest.approx(2.0)   # preempts at deadline
+    assert pulses[1].stall_s == 0.0
+    assert 2.0 <= pulses[1].start_s <= 3.5
+
+
+def test_account_with_placements_splits_hidden_energy():
+    b = _bank()
+    b.peak_words = 50
+    b.occ_bit_s = 1.0
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=2.0)
+    b.occupy_port(0.0, 2.0)
+    placements = {0: sched.place_pulses(b, duration_s=4.0, freq_hz=100.0)}
+    (d,) = sched.account([b], 4.0, 100.0, 10.0, 20.0,
+                         placements=placements)
+    assert d.refreshed and d.refresh_count == 2 and d.hidden_count == 1
+    assert d.stall_s == pytest.approx(0.5)           # only the unhidden pulse
+    assert d.refresh_hidden_j == pytest.approx(d.refresh_j / 2)
+    assert b.refresh_hidden == 1
+
+
+# --------------------------------------------- refresh hiding, synthetically
+
+def _long_compute_trace(n_ops=4, dur=50e-6):
+    """A long-lived resident tensor plus a few long compute ops with tiny
+    traffic — ports are idle nearly all the time."""
+    events = [TraceEvent(0.0, "W0", "hot", "write", WORD * 4)]
+    schedule = [("W0", 0.0, 0.0)]
+    for k in range(n_ops):
+        t0, t1 = k * dur, (k + 1) * dur
+        events.append(TraceEvent(t0, f"C{k}", "hot", "read", WORD * 4))
+        events.append(TraceEvent(t1, f"C{k}", f"t{k}", "write", WORD))
+        schedule.append((f"C{k}", t0, t1))
+    return events, schedule, n_ops * dur
+
+
+def test_refresh_hides_under_long_compute_ops():
+    """ISSUE acceptance: long compute ops -> near-zero refresh_stall_s
+    under the timeline model, refresh *energy* matching additive."""
+    events, schedule, total = _long_compute_trace()
+    cfg = ed.EDRAMConfig()
+    kw = dict(temp_c=0.0, duration_s=total, refresh_policy="selective",
+              alloc_policy="first_fit", freq_hz=500e6)
+    tml = replay_timeline(events, cfg, op_schedule=schedule, **kw)
+    add = replay(events, cfg,
+                 op_durations={n: e - s for n, s, e in schedule}, **kw)
+    assert add.refresh_count > 0
+    assert add.refresh_stall_s > 0.0          # additive: every pulse stalls
+    assert tml.refresh_stall_s == 0.0         # timeline: all pulses hide
+    assert tml.refresh_count == sum(b.refresh_hidden for b in tml.banks)
+    assert tml.refresh_j == pytest.approx(add.refresh_j)
+    assert tml.refresh_hidden_j == pytest.approx(tml.refresh_j)
+    assert tml.energy.total_j == pytest.approx(add.energy.total_j)
+    assert tml.timing == "timeline" and add.timing == "additive"
+    assert tml.timeline["pulses_hidden"] == tml.timeline["pulses"] > 0
+
+
+def test_refresh_stalls_when_ports_never_idle():
+    """A port-saturating op leaves no idle window: pulses preempt at
+    their deadlines and charge full serialization."""
+    cfg = ed.EDRAMConfig()
+    words = 4000          # fits one bank; port time 8 us at 500 MHz, and
+    #                       pulse time 8 us > the 6.7 us retention interval
+    events = [TraceEvent(0.0, "BIG", "big", "write", WORD * words),
+              TraceEvent(0.0, "BIG", "big", "read", WORD * words)]
+    schedule = [("BIG", 0.0, 10e-6)]
+    tml = replay_timeline(events, cfg, op_schedule=schedule, temp_c=60.0,
+                          duration_s=10e-6, refresh_policy="always",
+                          alloc_policy="first_fit", freq_hz=500e6)
+    assert tml.refresh_count > 0
+    assert tml.timeline["pulses_hidden"] == 0
+    assert tml.refresh_stall_s > 0.0
+    assert tml.refresh_hidden_j == 0.0
+
+
+# ------------------------------------------------ arm-level acceptance gates
+
+HOT = dict(temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime")
+
+
+def test_timeline_cuts_refresh_stall_on_hot_camel_arm():
+    """Acceptance: on a Fig-24 CAMEL arm (hot operating point),
+    refresh_stall_s strictly decreases vs additive while total refresh
+    energy agrees within 5%."""
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(**HOT)
+    add = sim.run(arm, timing="additive")
+    tml = sim.run(arm, timing="timeline")
+    assert add.refresh_stall_s > 0.0
+    assert tml.refresh_stall_s < add.refresh_stall_s
+    assert tml.memory["refresh_j"] == pytest.approx(
+        add.memory["refresh_j"], rel=0.05)
+    assert tml.refresh_hidden_j > 0.0
+    assert 0 < tml.timeline["pulses_hidden"] <= tml.timeline["pulses"]
+    # hiding shortens the iteration, never the energy
+    assert tml.latency_s < add.latency_s
+    assert tml.memory_j == pytest.approx(add.memory_j)
+
+
+@pytest.mark.parametrize("name", ["DuDNN+CAMEL", "FR+SRAM"])
+def test_energy_invariant_across_timing_models(name):
+    """The timing model moves *time*, not energy: read/write/refresh/
+    off-chip totals agree bit-for-bit between additive and timeline."""
+    add = sim.run(sim.get_arm(name), timing="additive")
+    tml = sim.run(sim.get_arm(name), timing="timeline")
+    for field in ("read_j", "write_j", "refresh_j", "offchip_j"):
+        assert tml.memory[field] == add.memory[field], field
+    assert tml.memory_j == add.memory_j
+    assert tml.refresh_free == add.refresh_free
+    assert tml.offchip_bits == add.offchip_bits
+
+
+def test_timeline_latency_composition():
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL").with_system(**HOT))
+    assert rep.timing == "timeline"
+    ctrl = rep.controller
+    assert ctrl.stall_s == pytest.approx(
+        ctrl.conflict_stall_s + ctrl.refresh_stall_s)
+    assert rep.timeline["makespan_s"] == pytest.approx(
+        rep.timeline["schedule_s"] + ctrl.conflict_stall_s)
+    assert rep.latency_s == pytest.approx(
+        rep.timeline["schedule_s"] + rep.stall_s
+        + (rep.offchip_bits / rep.config["system"]["offchip_bw_bps"]
+           if rep.offchip_bits else 0.0))
+    assert any(b["busy_s"] > 0 for b in rep.memory["banks"])
+
+
+def test_timeline_report_roundtrips_through_json():
+    import json
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL").with_system(**HOT))
+    back = sim.ArmReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back == rep
+    assert back.timing == "timeline"
+    assert back.timeline["pulses"] == rep.timeline["pulses"]
+
+
+# -------------------------------------------------- PR-2 additive cross-check
+
+# golden numbers captured from the PR 2 additive model (seed workloads);
+# timing="additive" must keep reproducing them
+PR2_GOLDEN = {
+    "DuDNN+CAMEL": dict(latency_s=0.0010118656680769755,
+                        energy_j=5.0440828927999996e-05,
+                        memory_j=4.921161727999997e-06,
+                        stall_s=0.0001393277868158865,
+                        offchip_bits=0.0),
+    "FR+SRAM": dict(latency_s=0.016785139491461078,
+                    energy_j=0.00021226073702399994,
+                    memory_j=0.00010618365542399993,
+                    stall_s=0.014962361806451593,
+                    offchip_bits=43352064.0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PR2_GOLDEN))
+def test_additive_reproduces_pr2_numbers_exactly(name):
+    rep = sim.run(sim.get_arm(name), timing="additive")
+    assert rep.timing == "additive"
+    for field, want in PR2_GOLDEN[name].items():
+        assert getattr(rep, field) == pytest.approx(want, rel=1e-12), field
+
+
+def test_additive_timing_equals_default_pipeline():
+    """timing="additive" selects exactly the PR-2 staged pipeline."""
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(**HOT)
+    a = sim.run(arm, timing="additive")
+    b = sim.run(arm, pipeline=sim.DEFAULT_PIPELINE)
+    assert a.to_dict() == b.to_dict()
+
+
+def test_run_validates_timing_selector():
+    arm = sim.get_arm("DuDNN+CAMEL")
+    with pytest.raises(ValueError, match="unknown timing"):
+        sim.run(arm, timing="instant")
+    with pytest.raises(ValueError, match="not both"):
+        sim.run(arm, pipeline=sim.DEFAULT_PIPELINE, timing="additive")
+    assert sim.DEFAULT_TIMING == "timeline"
+
+
+# ----------------------------------------------------- parallel grid sweeps
+
+def _small(name):
+    return sim.get_arm(name).with_workload(n_blocks=2, batch=4,
+                                           c_branch=8, c_backbone=16)
+
+
+def test_sweep_grid_order_is_deterministic():
+    arms = [_small("DuDNN+CAMEL"), _small("FR+SRAM")]
+    reports = sim.sweep(arms, temps=(60.0, 100.0))
+    assert [r.arm for r in reports] == ["DuDNN+CAMEL"] * 2 + ["FR+SRAM"] * 2
+    assert [r.config["system"]["temp_c"] for r in reports] == \
+        [60.0, 100.0, 60.0, 100.0]
+
+
+def test_parallel_sweep_matches_sequential():
+    arms = [_small("DuDNN+CAMEL"), _small("FR+SRAM")]
+    kw = dict(workloads=[dict(n_blocks=2), dict(n_blocks=3)],
+              temps=(60.0, 100.0))
+    seq = sim.sweep(arms, **kw)
+    par = sim.sweep(arms, parallel=2, **kw)
+    assert len(seq) == len(par) == 8
+    assert [r.to_dict() for r in seq] == [r.to_dict() for r in par]
+
+
+def test_sweep_workload_axis_accepts_specs_and_dicts():
+    spec = sim.WorkloadSpec(n_blocks=2, batch=4, c_branch=8, c_backbone=16)
+    reports = sim.sweep([sim.get_arm("DuDNN+CAMEL")],
+                        workloads=[spec, dict(n_blocks=3, batch=4,
+                                              c_branch=8, c_backbone=16)])
+    assert reports[0].config["workload"]["n_blocks"] == 2
+    assert reports[1].config["workload"]["n_blocks"] == 3
+
+
+def test_sweep_rejects_bad_timing_before_spawning():
+    with pytest.raises(ValueError, match="unknown timing"):
+        sim.sweep([_small("DuDNN+CAMEL")], timing="nope", parallel=2)

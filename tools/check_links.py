@@ -1,0 +1,55 @@
+"""Markdown link checker for the repo's docs (stdlib only).
+
+Scans the given markdown files for inline links/images
+(``[text](target)``) and verifies that every *relative* target exists on
+disk (anchors are stripped; ``http(s)://``, ``mailto:`` and pure-anchor
+links are skipped).  Exits non-zero listing the broken links.
+
+    python tools/check_links.py README.md ROADMAP.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images; [text](target "title") tolerated, nested parens not
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def check(paths: list[str]) -> list[str]:
+    broken = []
+    for name in paths:
+        md = Path(name)
+        text = md.read_text(encoding="utf-8")
+        # fenced code blocks routinely contain (…) that aren't links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK.findall(text):
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append(f"{md}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    missing = [p for p in argv if not Path(p).exists()]
+    if missing:
+        print("no such file: " + ", ".join(missing), file=sys.stderr)
+        return 2
+    broken = check(argv)
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"{len(argv)} files checked, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
