@@ -11,6 +11,11 @@ oracle at the refresh-free operating point.
 ``run(timing=...)`` selects the memory stall model; the
 ``refresh_hiding`` row always compares both (timeline must strictly cut
 refresh stall vs additive at identical refresh energy).
+``run(freqs=[...])`` (``--freq``) re-runs the hiding comparison at each
+operating point — pulse widths scale with 1/f against wall-clock
+retention deadlines, so the hiding rate degrades as the clock drops and
+a ``pulse_exceeds_retention`` warning row appears once a bank's pulse
+outlasts its retention interval.
 """
 from __future__ import annotations
 
@@ -31,18 +36,24 @@ def _arm(label: str, workload: sim.WorkloadSpec, **system) -> sim.Arm:
                    workload=workload, reversible=True, iters_to_target=None)
 
 
-def _hiding_row() -> dict:
+def _hiding_row(freq_hz=None) -> dict:
     """Refresh hiding at the hot operating point: the timeline model must
-    strictly cut refresh stall vs additive at (bit-)identical refresh
-    energy — this row always runs both timings to compare."""
+    cut refresh stall vs additive at (bit-)identical refresh energy —
+    this row always runs both timings to compare.  ``freq_hz`` re-prices
+    the op schedule at another clock (retention deadlines stay
+    wall-clock), so hiding degrades as the clock drops."""
     arm = sim.get_arm("DuDNN+CAMEL").with_system(
         temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime")
+    if freq_hz is not None:
+        arm = arm.with_cost(sim.FixedClock(freq_hz=freq_hz))
     add = sim.run(arm, timing="additive")
     tml = sim.run(arm, timing="timeline")
     dj = abs(tml.memory["refresh_j"] - add.memory["refresh_j"])
     rel = dj / add.memory["refresh_j"] if add.memory["refresh_j"] else 0.0
+    tag = "bank_occupancy/refresh_hiding/T100" + (
+        f"/f{tml.freq_hz / 1e6:g}MHz" if freq_hz is not None else "")
     return {
-        "row": (f"bank_occupancy/refresh_hiding/T100,"
+        "row": (f"{tag},"
                 f"{tml.latency_s*1e6:.1f},"
                 f"additive_refresh_stall_us={add.refresh_stall_s*1e6:.2f};"
                 f"timeline_refresh_stall_us={tml.refresh_stall_s*1e6:.2f};"
@@ -51,13 +62,28 @@ def _hiding_row() -> dict:
                 f"hidden_j={tml.refresh_hidden_j:.3e};"
                 f"stall_decreases="
                 f"{tml.refresh_stall_s < add.refresh_stall_s};"
-                f"refresh_j_rel_err={rel:.4f}"),
+                f"refresh_j_rel_err={rel:.4f};"
+                f"pulse_exceeds_retention={tml.pulse_exceeds_retention}"),
         "arm": "DuDNN+CAMEL",
+        "freq_hz": tml.freq_hz,
         "config": tml.config,
+        "_warn": tml.pulse_exceeds_retention,
     }
 
 
-def run(timing=None) -> list:
+def _append_hiding(rows: list, freq_hz=None) -> None:
+    """One hiding row (+ a warning line when a bank's pulse can never
+    hide inside its retention interval)."""
+    row = _hiding_row(freq_hz)
+    warn = row.pop("_warn")
+    rows.append(row)
+    if warn:
+        rows.append(f"{row['row'].split(',', 1)[0]}/WARN,0,"
+                    f"refresh pulse exceeds the retention interval on >=1 "
+                    f"bank - refresh there can never hide")
+
+
+def run(timing=None, freqs=None) -> list:
     rows: list = []
     for label, nb, batch, cb, ck in CONFIGS:
         wl = sim.WorkloadSpec(n_blocks=nb, batch=batch, spatial=7,
@@ -121,11 +147,14 @@ def run(timing=None) -> list:
         "arm": "FR+SRAM",
         "config": fr.config,
     })
-    rows.append(_hiding_row())
+    _append_hiding(rows)
+    for f in (freqs or ()):
+        _append_hiding(rows, freq_hz=f)
     rows.append("bank_occupancy/claim,0,"
                 "paper=selective refresh skips refresh-free banks (Fig 23) "
                 "and beats always-refresh energy (Fig 24); timeline model "
-                "hides refresh in bank-idle windows")
+                "hides refresh in bank-idle windows; hiding is "
+                "frequency-dependent (--freq sweeps operating points)")
     return rows
 
 

@@ -9,9 +9,17 @@ target; BO does not reach it — the paper drops those bars too).
 
 ``run(timing=..., parallel=...)`` forwards the stall-model selector and
 the process-pool width to ``sim.sweep`` (``benchmarks.run`` exposes them
-as ``--timing`` / ``--parallel``).
+as ``--timing`` / ``--parallel``).  ``run(freqs=[...])`` (``--freq``)
+adds a frequency sweep of the CAMEL arm at the nominal and hot operating
+points: op time scales with 1/f while retention deadlines stay
+wall-clock, so the rows show the refresh hiding rate and the
+refresh-free verdict flipping across operating points; a bank whose
+pulse outlasts its retention interval gets a one-line
+``pulse_exceeds_retention`` warning row.
 """
 from __future__ import annotations
+
+import dataclasses
 
 from repro import sim
 
@@ -25,7 +33,47 @@ ARCHS = [
 ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL")
 
 
-def run(timing=None, parallel=None) -> list:
+def _freq_rows(timing, parallel, freqs) -> list:
+    """The operating-point sweep: DuDNN+CAMEL at 60 °C and 100 °C across
+    ``freqs``; one row per (point, frequency) plus warning rows."""
+    freqs = list(freqs)            # consumed twice: sweep + row indexing
+    base = sim.get_arm("DuDNN+CAMEL")
+    points = [
+        base,
+        dataclasses.replace(
+            base.with_system(temp_c=100.0, alloc_policy="lifetime"),
+            name="DuDNN+CAMEL/T100"),
+    ]
+    flat = sim.sweep(points, timing=timing, freqs=freqs,
+                     parallel=parallel)
+    rows: list = []
+    for i, arm in enumerate(points):
+        for j, _ in enumerate(freqs):
+            rep = flat[i * len(freqs) + j]
+            tl = rep.timeline or {}
+            pulses, hidden = tl.get("pulses", 0), tl.get("pulses_hidden", 0)
+            tag = f"fig24/freq/{arm.name}/f{rep.freq_hz / 1e6:g}MHz"
+            rows.append({
+                "row": (f"{tag},{rep.latency_s*1e6:.1f},"
+                        f"refresh_free={rep.refresh_free};"
+                        f"hidden={hidden}/{pulses};"
+                        f"refresh_stall_us={rep.refresh_stall_s*1e6:.2f};"
+                        f"refresh_hidden_j={rep.refresh_hidden_j:.3e};"
+                        f"energy_j={rep.energy_j:.4e};"
+                        f"pulse_exceeds_retention="
+                        f"{rep.pulse_exceeds_retention}"),
+                "arm": rep.arm,
+                "freq_hz": rep.freq_hz,
+                "config": rep.config,
+            })
+            if rep.pulse_exceeds_retention:
+                rows.append(
+                    f"{tag}/WARN,0,refresh pulse exceeds the retention "
+                    f"interval on >=1 bank - refresh there can never hide")
+    return rows
+
+
+def run(timing=None, parallel=None, freqs=None) -> list:
     rows: list = []
     # one grid sweep: arms × archs, in deterministic order
     arms = [sim.get_arm(name) for name in ARMS]
@@ -56,6 +104,8 @@ def run(timing=None, parallel=None) -> list:
             f"ETAxFR={fr.eta_j / camel.eta_j:.2f};"
             f"ETAxCA={ca.eta_j / camel.eta_j:.2f};"
             f"refresh_free={camel.refresh_free}")
+    if freqs:
+        rows += _freq_rows(timing, parallel, freqs)
     rows.append("fig24/claim,0,paper=DuDNN+CAMEL best TTA & >=2x ETA")
     return rows
 

@@ -8,14 +8,19 @@ tracking; suites that simulate a system arm attach the arm name and its
 fully resolved config (``repro.sim.ArmReport.config``), so each record is
 self-describing.  ``--list`` prints the registered suites.
 
-``--timing additive|timeline`` selects the memory stall model and
-``--parallel N`` the ``sim.sweep`` process-pool width; both are forwarded
-to the suites that accept them (currently fig24 and bank_occupancy).
+``--timing additive|timeline`` selects the memory stall model,
+``--parallel N`` the ``sim.sweep`` process-pool width, and
+``--freq F1,F2,...`` an operating-point axis (Hz, e.g. ``2.5e8,5e8`` —
+each becomes a ``FixedClock`` cost model); all are forwarded to the
+suites that accept them (currently fig24 and bank_occupancy).  Rows from
+a frequency sweep carry a top-level ``freq_hz`` field in the ``--json``
+records, so sweep outputs stay machine-comparable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
                                             [--json out.json] [--list]
                                             [--timing timeline]
                                             [--parallel 4]
+                                            [--freq 2.5e8,5e8]
 """
 from __future__ import annotations
 
@@ -96,7 +101,13 @@ def main() -> None:
     ap.add_argument("--parallel", default=None, type=int, metavar="N",
                     help="sim.sweep process-pool width for suites that "
                          "support it")
+    ap.add_argument("--freq", default=None, metavar="F1,F2,...",
+                    help="comma-separated operating frequencies in Hz "
+                         "(each a FixedClock point) for suites that sweep "
+                         "them; records carry freq_hz")
     args = ap.parse_args()
+    freqs = ([float(f) for f in args.freq.split(",")]
+             if args.freq else None)
 
     if args.list:
         for name in (*SUITES, "roofline"):
@@ -123,10 +134,12 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            # forward --timing/--parallel to suites whose run() accepts them
+            # forward --timing/--parallel/--freq to suites whose run()
+            # accepts them
             accepted = inspect.signature(SUITES[name]).parameters
             kwargs = {k: v for k, v in (("timing", args.timing),
-                                        ("parallel", args.parallel))
+                                        ("parallel", args.parallel),
+                                        ("freqs", freqs))
                       if v is not None and k in accepted}
             for row in SUITES[name](**kwargs):
                 emit(row)

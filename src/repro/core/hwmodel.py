@@ -22,6 +22,14 @@ convergence behaviour when a full training run is out of scope.
     *your* call site, including for the module-level ``SRAM_ONLY``
     attribute, via ``__getattr__``) and delegate; ``SystemConfig`` stays
     canonical here.  Migration recipes: ``docs/sim-api.md``.
+
+.. deprecated::
+    Reading ``SystemConfig.freq_hz`` directly for *timing* is deprecated:
+    it is only the default operating point the ``FixedClock`` cost model
+    resolves when ``Arm.cost`` is unset.  Timing code must price work
+    through the resolved cost model (``repro.sim.cost.resolve_cost`` /
+    the pipeline's ``cost`` stage, surfaced as ``ArmReport.freq_hz``) —
+    a raw ``cfg.freq_hz`` read silently ignores DVFS operating points.
 """
 from __future__ import annotations
 
@@ -40,7 +48,9 @@ FP16_BITS = 16.0
 class SystemConfig:
     name: str = "CAMEL"
     array: int = 6                 # §V-A: 6×6 systolic PEs
-    freq_hz: float = 500e6         # §VI-D
+    # §VI-D — the *nominal* clock: the FixedClock default.  Deprecated as
+    # a raw timing read; resolve through the cost model (module docstring)
+    freq_hz: float = 500e6
     bfp_group: int = 3
     mac_pj: float = 0.35           # BFP 6-bit-mantissa MAC (modeled 16nm)
     mac_pj_fp16: float = 0.9

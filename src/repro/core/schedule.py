@@ -7,15 +7,21 @@ read again is dead"), and reports per-tensor lifetimes, peak live memory,
 and read/write bit traffic.  Cross-validates the closed forms in
 ``core.lifetime`` (tests assert agreement within one op duration) and feeds
 ``core.hwmodel``'s energy accounting.
+
+Ops carry *work* (:class:`OpWork` — MAC counts, port words, DMA bits),
+not durations: a cost model (``repro.sim.cost``) prices work into seconds
+at an operating point (``simulate(..., op_seconds=...)``), which is what
+makes op latency frequency-dependent under DVFS.  ``Op.duration`` remains
+as a derived back-compat property at the builder's baseline rate.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Optional, Sequence
 
 import networkx as nx
 
-from repro.core.lifetime import DuBlockSpec, OpSpec, latency
+from repro.core.lifetime import DuBlockSpec, OpSpec
 
 EVENT_KINDS = ("alloc", "write", "read", "free")
 
@@ -44,11 +50,75 @@ class TraceEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class OpWork:
+    """Hardware-independent *work* of one op — what it does, not how long
+    it takes.  A cost model (``repro.sim.cost``) turns work into seconds
+    at an operating point:
+
+    ``macs``
+        MAC count on the systolic array (eqs 3–5 use these; time is
+        ``macs / effective-MAC-rate`` and the rate scales with clock).
+    ``port_words``
+        Explicit bank-port words the op moves outside its MAC stream
+        (zero for the paper's ops — port timing is resolved per bank by
+        the memory controller replay against the same clock).
+    ``dma_bits``
+        Off-chip DMA payload; priced against the wall-clock off-chip
+        bandwidth (a DMA engine does not speed up when the core clocks
+        down).
+    """
+    macs: float = 0.0
+    port_words: float = 0.0
+    dma_bits: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class Op:
+    """One scheduled op: *work* plus dataflow (reads/writes).
+
+    ``duration`` is a **derived** property, not a stored field: it is
+    ``work.macs / rate`` at the builder's baseline MAC/s (``rate``), the
+    back-compat view for callers that used the pre-cost-model API.  The
+    ``repro.sim`` pipeline ignores it and re-times ops through the arm's
+    cost model (``simulate(..., op_seconds=...)``), which is what makes
+    op latency frequency-dependent under DVFS.
+
+    Legacy positional construction ``Op(name, seconds, reads, writes)``
+    (a number where ``work`` goes) still works: the number is captured
+    as an explicit ``duration_s`` pin with empty work.  Keyword
+    construction ``Op(duration=...)`` is gone — pass ``duration_s=``
+    (see docs/sim-api.md migration notes).
+    """
     name: str
-    duration: float
+    work: OpWork
     reads: tuple
     writes: tuple
+    rate: float = 0.0              # builder's baseline MAC/s
+    duration_s: Optional[float] = None   # explicit pin; wins over work
+
+    def __post_init__(self):
+        if not isinstance(self.work, OpWork):    # legacy Op(name, secs, ...)
+            object.__setattr__(self, "duration_s", float(self.work))
+            object.__setattr__(self, "work", OpWork())
+
+    @property
+    def duration(self) -> float:
+        """Seconds at the builder's baseline rate (back-compat view).
+
+        Raises ``ValueError`` for an op that carries MAC work but no
+        baseline ``rate`` — reading a duration off an untimed op is a
+        bug (price it through a cost model instead), and silently
+        returning 0.0 would yield all-zero schedules.
+        """
+        if self.duration_s is not None:
+            return self.duration_s
+        if self.work.macs == 0.0:
+            return 0.0                 # fused/zero-work op
+        if self.rate <= 0.0:
+            raise ValueError(
+                f"op {self.name!r} carries MAC work but no baseline rate; "
+                f"build with R or price it via a cost model (op_seconds)")
+        return self.work.macs / self.rate
 
 
 @dataclasses.dataclass
@@ -79,50 +149,76 @@ def _tensor_bits(spec: OpSpec, bits_per_value: float) -> float:
     return spec.batch * spec.c_out * spec.width * spec.height * bits_per_value
 
 
-def forward_ops(blocks: Sequence[DuBlockSpec], R: float) -> list[Op]:
-    """Fig 12(c)/(d): per layer — G, F1, add(y2), F2, add(y1)."""
+def _mac(n_macs: float, R: float) -> dict:
+    """Op kwargs for a MAC-work op at baseline rate ``R`` (MAC/s)."""
+    return dict(work=OpWork(macs=n_macs), rate=R)
+
+
+_FUSED = dict(work=OpWork())       # elementwise add/copy fused into a MAC op
+
+
+def forward_ops(blocks: Sequence[DuBlockSpec], R: float = 0.0) -> list[Op]:
+    """Fig 12(c)/(d): per layer — G, F1, add(y2), F2, add(y1).
+
+    Ops carry *work* (MAC counts); ``R`` is only the baseline MAC/s their
+    back-compat ``duration`` property resolves against.
+    """
     ops = []
     for l, b in enumerate(blocks):
-        tg, t1, t2 = latency(b.g.macs, R), latency(b.f1.macs, R), \
-            latency(b.f2.macs, R)
         ops += [
-            Op(f"G{l}", tg, (f"k{l}",), (f"k{l+1}",)),
-            Op(f"F1_{l}", t1, (f"b1_{l}", f"k{l+1}"), (f"t{l}",)),
-            Op(f"ADD2_{l}", 0.0, (f"b2_{l}", f"t{l}"), (f"b2_{l+1}",)),
-            Op(f"F2_{l}", t2, (f"b2_{l+1}",), (f"s{l}",)),
-            Op(f"ADD1_{l}", 0.0, (f"b1_{l}", f"s{l}"), (f"b1_{l+1}",)),
+            Op(f"G{l}", reads=(f"k{l}",), writes=(f"k{l+1}",),
+               **_mac(b.g.macs, R)),
+            Op(f"F1_{l}", reads=(f"b1_{l}", f"k{l+1}"), writes=(f"t{l}",),
+               **_mac(b.f1.macs, R)),
+            Op(f"ADD2_{l}", reads=(f"b2_{l}", f"t{l}"),
+               writes=(f"b2_{l+1}",), **_FUSED),
+            Op(f"F2_{l}", reads=(f"b2_{l+1}",), writes=(f"s{l}",),
+               **_mac(b.f2.macs, R)),
+            Op(f"ADD1_{l}", reads=(f"b1_{l}", f"s{l}"),
+               writes=(f"b1_{l+1}",), **_FUSED),
         ]
     return ops
 
 
-def backward_ops(blocks: Sequence[DuBlockSpec], R: float) -> list[Op]:
+def backward_ops(blocks: Sequence[DuBlockSpec], R: float = 0.0) -> list[Op]:
     """Fig 14(c)/15(a): reversed walk with recompute + gradient ops."""
     ops = []
     L = len(blocks)
     for l in reversed(range(L)):
         b = blocks[l]
-        t1, t2 = latency(b.f1.macs_out, R), latency(b.f2.macs_out, R)
+        m1, m2 = b.f1.macs_out, b.f2.macs_out
         ops += [
             # eq 2 input recompute
-            Op(f"RF2_{l}", t2, (f"b2_{l+1}",), (f"rs{l}",)),
-            Op(f"SUBX1_{l}", 0.0, (f"b1_{l+1}", f"rs{l}"), (f"b1_{l}",)),
-            Op(f"RF1_{l}", t1, (f"b1_{l}",), (f"rt{l}",)),
-            Op(f"SUBX2_{l}", 0.0, (f"b2_{l+1}", f"rt{l}"), (f"b2_{l}",)),
+            Op(f"RF2_{l}", reads=(f"b2_{l+1}",), writes=(f"rs{l}",),
+               **_mac(m2, R)),
+            Op(f"SUBX1_{l}", reads=(f"b1_{l+1}", f"rs{l}"),
+               writes=(f"b1_{l}",), **_FUSED),
+            Op(f"RF1_{l}", reads=(f"b1_{l}",), writes=(f"rt{l}",),
+               **_mac(m1, R)),
+            Op(f"SUBX2_{l}", reads=(f"b2_{l+1}", f"rt{l}"),
+               writes=(f"b2_{l}",), **_FUSED),
             # input gradients: m = g2 + U2a(g1); s = g1 + U1a(m)
-            Op(f"U2A_{l}", t2, (f"g1_{l+1}",), (f"u2a{l}",)),
-            Op(f"ADDM_{l}", 0.0, (f"g2_{l+1}", f"u2a{l}"), (f"m{l}",)),
+            Op(f"U2A_{l}", reads=(f"g1_{l+1}",), writes=(f"u2a{l}",),
+               **_mac(m2, R)),
+            Op(f"ADDM_{l}", reads=(f"g2_{l+1}", f"u2a{l}"),
+               writes=(f"m{l}",), **_FUSED),
             # weight gradients
-            Op(f"U2W_{l}", t2, (f"g1_{l+1}", f"b2_{l+1}"), (f"q2_{l}",)),
-            Op(f"U1A_{l}", t1, (f"m{l}",), (f"u1a{l}",)),
-            Op(f"ADDS_{l}", 0.0, (f"g1_{l+1}", f"u1a{l}"), (f"g1_{l}",)),
-            Op(f"U1W_{l}", t1, (f"m{l}", f"b1_{l}"), (f"q1_{l}",)),
-            Op(f"COPYG2_{l}", 0.0, (f"m{l}",), (f"g2_{l}",)),
+            Op(f"U2W_{l}", reads=(f"g1_{l+1}", f"b2_{l+1}"),
+               writes=(f"q2_{l}",), **_mac(m2, R)),
+            Op(f"U1A_{l}", reads=(f"m{l}",), writes=(f"u1a{l}",),
+               **_mac(m1, R)),
+            Op(f"ADDS_{l}", reads=(f"g1_{l+1}", f"u1a{l}"),
+               writes=(f"g1_{l}",), **_FUSED),
+            Op(f"U1W_{l}", reads=(f"m{l}", f"b1_{l}"), writes=(f"q1_{l}",),
+               **_mac(m1, R)),
+            Op(f"COPYG2_{l}", reads=(f"m{l}",), writes=(f"g2_{l}",),
+               **_FUSED),
         ]
     return ops
 
 
 def irreversible_training_ops(
-        blocks: Sequence[DuBlockSpec], R: float) -> tuple[list, frozenset]:
+        blocks: Sequence[DuBlockSpec], R: float = 0.0) -> tuple[list, frozenset]:
     """One iteration of the irreversible (FR) baseline on a single timeline:
     whole-iteration activation buffering instead of eq-2 recompute.
 
@@ -144,34 +240,48 @@ def irreversible_training_ops(
     L = len(blocks)
     ops: list[Op] = []
     for l, b in enumerate(blocks):
-        tg, t1, t2 = latency(b.g.macs, R), latency(b.f1.macs, R), \
-            latency(b.f2.macs, R)
         ops += [
-            Op(f"SAVE1_{l}", 0.0, (f"b1_{l}",), (f"sv1_{l}",)),
-            Op(f"G{l}", tg, (f"k{l}",), (f"k{l+1}",)),
-            Op(f"F1_{l}", t1, (f"b1_{l}", f"k{l+1}"), (f"t{l}",)),
-            Op(f"ADD2_{l}", 0.0, (f"b2_{l}", f"t{l}"), (f"b2_{l+1}",)),
-            Op(f"SAVE2_{l}", 0.0, (f"b2_{l+1}",), (f"sv2_{l}",)),
-            Op(f"F2_{l}", t2, (f"b2_{l+1}",), (f"s{l}",)),
-            Op(f"ADD1_{l}", 0.0, (f"b1_{l}", f"s{l}"), (f"b1_{l+1}",)),
+            Op(f"SAVE1_{l}", reads=(f"b1_{l}",), writes=(f"sv1_{l}",),
+               **_FUSED),
+            Op(f"G{l}", reads=(f"k{l}",), writes=(f"k{l+1}",),
+               **_mac(b.g.macs, R)),
+            Op(f"F1_{l}", reads=(f"b1_{l}", f"k{l+1}"), writes=(f"t{l}",),
+               **_mac(b.f1.macs, R)),
+            Op(f"ADD2_{l}", reads=(f"b2_{l}", f"t{l}"),
+               writes=(f"b2_{l+1}",), **_FUSED),
+            Op(f"SAVE2_{l}", reads=(f"b2_{l+1}",), writes=(f"sv2_{l}",),
+               **_FUSED),
+            Op(f"F2_{l}", reads=(f"b2_{l+1}",), writes=(f"s{l}",),
+               **_mac(b.f2.macs, R)),
+            Op(f"ADD1_{l}", reads=(f"b1_{l}", f"s{l}"),
+               writes=(f"b1_{l+1}",), **_FUSED),
         ]
     # the loss head turns the final activations into output gradients
-    ops.append(Op("LOSS", 0.0, (f"b1_{L}", f"b2_{L}"),
-                  (f"g1_{L}", f"g2_{L}")))
+    ops.append(Op("LOSS", reads=(f"b1_{L}", f"b2_{L}"),
+                  writes=(f"g1_{L}", f"g2_{L}"), **_FUSED))
     for l in reversed(range(L)):
         b = blocks[l]
-        t1, t2 = latency(b.f1.macs_out, R), latency(b.f2.macs_out, R)
+        m1, m2 = b.f1.macs_out, b.f2.macs_out
         ops += [
             # buffered activations come back instead of eq-2 recompute
-            Op(f"FETCH2_{l}", 0.0, (f"sv2_{l}",), (f"b2f_{l}",)),
-            Op(f"U2A_{l}", t2, (f"g1_{l+1}",), (f"u2a{l}",)),
-            Op(f"ADDM_{l}", 0.0, (f"g2_{l+1}", f"u2a{l}"), (f"m{l}",)),
-            Op(f"U2W_{l}", t2, (f"g1_{l+1}", f"b2f_{l}"), (f"q2_{l}",)),
-            Op(f"U1A_{l}", t1, (f"m{l}",), (f"u1a{l}",)),
-            Op(f"ADDS_{l}", 0.0, (f"g1_{l+1}", f"u1a{l}"), (f"g1_{l}",)),
-            Op(f"FETCH1_{l}", 0.0, (f"sv1_{l}",), (f"b1f_{l}",)),
-            Op(f"U1W_{l}", t1, (f"m{l}", f"b1f_{l}"), (f"q1_{l}",)),
-            Op(f"COPYG2_{l}", 0.0, (f"m{l}",), (f"g2_{l}",)),
+            Op(f"FETCH2_{l}", reads=(f"sv2_{l}",), writes=(f"b2f_{l}",),
+               **_FUSED),
+            Op(f"U2A_{l}", reads=(f"g1_{l+1}",), writes=(f"u2a{l}",),
+               **_mac(m2, R)),
+            Op(f"ADDM_{l}", reads=(f"g2_{l+1}", f"u2a{l}"),
+               writes=(f"m{l}",), **_FUSED),
+            Op(f"U2W_{l}", reads=(f"g1_{l+1}", f"b2f_{l}"),
+               writes=(f"q2_{l}",), **_mac(m2, R)),
+            Op(f"U1A_{l}", reads=(f"m{l}",), writes=(f"u1a{l}",),
+               **_mac(m1, R)),
+            Op(f"ADDS_{l}", reads=(f"g1_{l+1}", f"u1a{l}"),
+               writes=(f"g1_{l}",), **_FUSED),
+            Op(f"FETCH1_{l}", reads=(f"sv1_{l}",), writes=(f"b1f_{l}",),
+               **_FUSED),
+            Op(f"U1W_{l}", reads=(f"m{l}", f"b1f_{l}"),
+               writes=(f"q1_{l}",), **_mac(m1, R)),
+            Op(f"COPYG2_{l}", reads=(f"m{l}",), writes=(f"g2_{l}",),
+               **_FUSED),
         ]
     buffered = frozenset(f"sv{i}_{l}" for i in (1, 2) for l in range(L))
     return ops, buffered
@@ -214,16 +324,25 @@ def _sizes(blocks: Sequence[DuBlockSpec], bits: float) -> dict:
 def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
              bits_per_value: float = 58 / 9,
              live_at_start: Sequence[str] = (),
-             buffered: Sequence[str] = ()) -> SimResult:
+             buffered: Sequence[str] = (),
+             op_seconds: Optional[Callable[[Op], float]] = None) -> SimResult:
     """Execute ``ops`` in order with the overwrite policy; measure lifetimes.
 
     A tensor becomes live at its producing op's end and dies after its last
     reader finishes (it is overwritten — Fig 12c's "x2 can be overwritten
     once y3 is produced").  Tensors named in ``buffered`` are tagged as
     whole-iteration buffers on their trace events (see :class:`TraceEvent`).
+
+    ``op_seconds`` is the cost-model hook: a callable resolving one op's
+    *work* into seconds (``repro.sim.cost.op_timer`` builds one from an
+    operating point).  ``None`` falls back to each op's back-compat
+    ``duration`` property — the builder's baseline rate.
     """
     sizes = _sizes(blocks, bits_per_value)
     buffered = frozenset(buffered)
+    if op_seconds is None:
+        def op_seconds(op):
+            return op.duration
     last_read_op: dict = {}
     for op in ops:
         for t in op.reads:
@@ -241,7 +360,7 @@ def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
                         bits=sizes.get(t, 0.0), buffered=t in buffered)
              for t in live_at_start]
     for op in ops:
-        start, end = t_now, t_now + op.duration
+        start, end = t_now, t_now + op_seconds(op)
         t_now = end
         schedule.append((op.name, start, end))
         for t in op.reads:
@@ -274,23 +393,31 @@ def simulate(ops: Sequence[Op], blocks: Sequence[DuBlockSpec],
 
 
 def simulate_training_iteration(blocks: Sequence[DuBlockSpec], R: float,
-                                bits_per_value: float = 58 / 9):
-    """Forward + backward of one iteration; returns (fwd, bwd) SimResults."""
+                                bits_per_value: float = 58 / 9,
+                                op_seconds=None):
+    """Forward + backward of one iteration; returns (fwd, bwd) SimResults.
+
+    ``op_seconds`` overrides the per-op work→seconds resolution (see
+    :func:`simulate`); the default prices each op at baseline rate ``R``.
+    """
     L = len(blocks)
     fwd = simulate(forward_ops(blocks, R), blocks, bits_per_value,
-                   live_at_start=("b1_0", "b2_0", "k0"))
+                   live_at_start=("b1_0", "b2_0", "k0"),
+                   op_seconds=op_seconds)
     bwd = simulate(backward_ops(blocks, R), blocks, bits_per_value,
                    live_at_start=(f"b1_{L}", f"b2_{L}",
-                                  f"g1_{L}", f"g2_{L}"))
+                                  f"g1_{L}", f"g2_{L}"),
+                   op_seconds=op_seconds)
     return fwd, bwd
 
 
 def simulate_irreversible_iteration(blocks: Sequence[DuBlockSpec], R: float,
-                                    bits_per_value: float = 16.0
-                                    ) -> SimResult:
+                                    bits_per_value: float = 16.0,
+                                    op_seconds=None) -> SimResult:
     """One FR-baseline iteration on a single timeline (forward + buffered
     backward); the whole-iteration activation buffers appear as ``buffered``
     trace events so the memory controller models their spills."""
     ops, buffered = irreversible_training_ops(blocks, R)
     return simulate(ops, blocks, bits_per_value,
-                    live_at_start=("b1_0", "b2_0", "k0"), buffered=buffered)
+                    live_at_start=("b1_0", "b2_0", "k0"), buffered=buffered,
+                    op_seconds=op_seconds)

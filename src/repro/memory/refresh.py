@@ -47,6 +47,10 @@ class RefreshDecision:
     # the share of refresh_j they carry (energy still paid, time hidden)
     hidden_count: int = 0
     refresh_hidden_j: float = 0.0
+    # the can-never-hide case (ROADMAP): this bank's pulse needs more
+    # continuous port time than one retention interval provides, so no
+    # idle window can ever fit it — every pulse stalls, by construction
+    pulse_exceeds_retention: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,8 +89,14 @@ class RefreshScheduler:
         self.temp_c = temp_c
         self.retention_s = (retention_s if retention_s is not None
                             else ed.retention_s(temp_c))
-        self.interval_s = (interval_s if interval_s is not None
-                           else ed.refresh_interval_s(temp_c, guard))
+        # an overridden retention floor implies the interval too (an SRAM
+        # replay's inf retention must not report a finite eDRAM interval)
+        if interval_s is not None:
+            self.interval_s = interval_s
+        elif retention_s is not None:
+            self.interval_s = retention_s / max(guard, 1e-9)
+        else:
+            self.interval_s = ed.refresh_interval_s(temp_c, guard)
 
     def needs_refresh(self, bank: BankState) -> bool:
         """The per-bank co-design criterion (eq 10 at bank granularity)."""
@@ -165,7 +175,12 @@ class RefreshScheduler:
             stalls in **s**).  Refresh energy integrates occupancy over
             time (∫occ·dt / interval × pJ/bit) and is split into the
             sense/read and restore/write-back phases;
-            ``RefreshDecision.refresh_j`` stays the total.
+            ``RefreshDecision.refresh_j`` stays the total.  A refreshed
+            bank whose pulse width ``port_service_s(peak_words)`` exceeds
+            the retention interval is flagged
+            ``pulse_exceeds_retention`` — it can never hide (note the
+            pulse width scales with 1/``freq_hz`` while the interval is
+            wall-clock, so clocking down can trip this).
 
         Mutates each bank's ``refresh_count`` / ``refresh_bits`` /
         ``refresh_hidden`` / ``stall_s`` counters.
@@ -179,6 +194,9 @@ class RefreshScheduler:
             read_j = restore_j = hidden_j = 0.0
             count = hidden = 0
             stall = 0.0
+            exceeds = (refreshed and math.isfinite(self.interval_s)
+                       and port_service_s(b.peak_words, freq_hz)
+                       > self.interval_s)
             if refreshed:
                 # ∫occ·dt / interval — fractional intervals included, so a
                 # short iteration still pays its pro-rata share
@@ -209,5 +227,6 @@ class RefreshScheduler:
                                        refresh_read_j=read_j,
                                        refresh_restore_j=restore_j,
                                        hidden_count=hidden,
-                                       refresh_hidden_j=hidden_j))
+                                       refresh_hidden_j=hidden_j,
+                                       pulse_exceeds_retention=exceeds))
         return out

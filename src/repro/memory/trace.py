@@ -61,6 +61,9 @@ class BankReport:
     # timeline model only (zero under the additive model)
     busy_s: float = 0.0            # port-busy time on the event timeline
     refresh_hidden: int = 0        # pulses placed into idle windows
+    # this bank's refresh pulse is longer than its retention interval —
+    # it can never hide under compute (see RefreshScheduler.account)
+    pulse_exceeds_retention: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +93,11 @@ class ControllerReport:
     spilled_tensors: tuple
     refresh_read_j: float = 0.0    # refresh sense phase (sums to refresh_j
     refresh_restore_j: float = 0.0  # with the restore/write-back phase)
+    # the wall-clock retention floor / refresh interval the scheduler ran
+    # with — invariant under frequency scaling; both are math.inf on SRAM
+    # replays (never refresh) and serialize as null in the JSON form
+    retention_s: float = 0.0
+    interval_s: float = 0.0
     timing: str = "additive"       # additive | timeline
     conflict_stall_s: float = 0.0  # bank/port contention share of stall_s
     refresh_stall_s: float = 0.0   # unhidden-refresh share of stall_s
@@ -110,6 +118,13 @@ class ControllerReport:
     def safe(self) -> bool:
         """No silent data loss: every over-retention bank was refreshed."""
         return all(b.refreshed for b in self.banks if b.needs_refresh)
+
+    @property
+    def pulse_exceeds_retention(self) -> bool:
+        """Some bank's refresh pulse outlasts its retention interval —
+        refresh on that bank can never hide under compute (it stalls
+        every interval by construction; benchmarks surface a warning)."""
+        return any(b.pulse_exceeds_retention for b in self.banks)
 
 
 @dataclasses.dataclass
@@ -294,7 +309,8 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
             peak_occupancy=b.peak_words / core.geom.words_per_bank,
             max_resident_lifetime_s=b.max_resident_s,
             needs_refresh=d.needs_refresh, refreshed=d.refreshed,
-            busy_s=b.busy_s, refresh_hidden=d.hidden_count)
+            busy_s=b.busy_s, refresh_hidden=d.hidden_count,
+            pulse_exceeds_retention=d.pulse_exceeds_retention)
         for b, d in zip(core.alloc.banks, decisions))
 
     return ControllerReport(
@@ -308,6 +324,8 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
         spilled_tensors=tuple(core.alloc.spilled),
         refresh_read_j=refresh_read_j,
         refresh_restore_j=refresh_restore_j,
+        retention_s=core.sched.retention_s,
+        interval_s=core.sched.interval_s,
         timing=timing, conflict_stall_s=conflict_stall_s,
         refresh_stall_s=refresh_stall, refresh_hidden_j=refresh_hidden_j,
         timeline=timeline)

@@ -23,6 +23,13 @@ additive model as a bit-compatible cross-validation baseline.
 ``sim.sweep`` fans a grid of arms × workloads × temperatures over a
 process pool (``parallel=N``) with deterministic result ordering.
 
+Op *work* and op *time* are split by a pluggable cost model
+(``repro.sim.cost``): ops carry MAC/port/DMA work and the arm's ``cost``
+policy — ``FixedClock`` (default, the nominal 500 MHz point) or
+``DVFSState`` (frequency/voltage operating points, dynamic energy ∝ V²,
+retention deadlines held in wall-clock) — prices it into seconds.
+``sim.sweep(..., freqs=[...])`` adds the operating-point grid axis.
+
 Custom arms are frozen dataclasses (``sim.Arm``) and can be registered
 (``sim.register_arm``); custom pipelines swap stages
 (``sim.Pipeline.with_stage``) — exactly how the timeline model installs
@@ -31,6 +38,8 @@ itself.  See ``docs/sim-api.md`` for the full reference.
 from repro.sim.arm import (ARM_REGISTRY, ITERS_CHAIN, ITERS_TARGET,
                            WORKLOAD_KINDS, Arm, WorkloadSpec, arms, get_arm,
                            register_arm)
+from repro.sim.cost import (CostModel, DVFSState, FixedClock,
+                            OperatingPoint, op_timer, resolve_cost)
 from repro.sim.pipeline import (DEFAULT_PIPELINE, DEFAULT_STAGES,
                                 DEFAULT_TIMING, TIMINGS, Pipeline,
                                 SimContext, resolve_pipeline, run, sweep)
@@ -39,9 +48,11 @@ from repro.sim.timeline import (TIMELINE_PIPELINE, replay_timeline,
                                 stage_timeline)
 
 __all__ = [
-    "ARM_REGISTRY", "Arm", "ArmReport", "DEFAULT_PIPELINE", "DEFAULT_STAGES",
-    "DEFAULT_TIMING", "ITERS_CHAIN", "ITERS_TARGET", "Pipeline",
+    "ARM_REGISTRY", "Arm", "ArmReport", "CostModel", "DEFAULT_PIPELINE",
+    "DEFAULT_STAGES", "DEFAULT_TIMING", "DVFSState", "FixedClock",
+    "ITERS_CHAIN", "ITERS_TARGET", "OperatingPoint", "Pipeline",
     "SimContext", "TIMELINE_PIPELINE", "TIMINGS", "WORKLOAD_KINDS",
-    "WorkloadSpec", "arms", "get_arm", "register_arm", "replay_timeline",
-    "resolve_pipeline", "run", "stage_timeline", "sweep",
+    "WorkloadSpec", "arms", "get_arm", "op_timer", "register_arm",
+    "replay_timeline", "resolve_cost", "resolve_pipeline", "run",
+    "stage_timeline", "sweep",
 ]

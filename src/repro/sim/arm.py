@@ -28,6 +28,7 @@ from typing import Optional, Tuple
 
 from repro.core import hwmodel as hw
 from repro.core import lifetime as lt
+from repro.sim.cost import CostModel
 
 WORKLOAD_KINDS = ("duplex_cnn", "lm_branch")
 
@@ -67,13 +68,23 @@ class WorkloadSpec:
 
 @dataclasses.dataclass(frozen=True)
 class Arm:
-    """One system arm: workload + system config + memory policies."""
+    """One system arm: workload + system config + memory policies.
+
+    ``cost`` is the timing policy — the pluggable cost model
+    (``repro.sim.cost``) that turns op *work* into seconds at an
+    operating point.  ``None`` means :class:`~repro.sim.cost.FixedClock`
+    at the system's nominal ``freq_hz`` (bit-identical to the
+    pre-cost-model pipeline); a :class:`~repro.sim.cost.DVFSState`
+    evaluates the same arm at a different frequency/voltage point while
+    retention deadlines stay wall-clock.
+    """
     name: str
     system: hw.SystemConfig = hw.SystemConfig()
     reversible: bool = True
     workload: Optional[WorkloadSpec] = WorkloadSpec()
     blocks: Optional[Tuple[lt.DuBlockSpec, ...]] = None
     iters_to_target: Optional[float] = ITERS_TARGET
+    cost: Optional[CostModel] = None
 
     def resolve_blocks(self) -> Tuple[lt.DuBlockSpec, ...]:
         """Explicit ``blocks`` win over the parametric ``workload``."""
@@ -93,6 +104,11 @@ class Arm:
         """New arm with SystemConfig fields replaced."""
         return dataclasses.replace(
             self, system=dataclasses.replace(self.system, **fields))
+
+    def with_cost(self, cost: Optional[CostModel]) -> "Arm":
+        """New arm simulated under ``cost`` (a ``repro.sim.cost`` model;
+        ``None`` restores the FixedClock default)."""
+        return dataclasses.replace(self, cost=cost)
 
 
 # ---------------------------------------------------------------- registry

@@ -1,0 +1,164 @@
+"""Pluggable cost models: op *work* → op *time* at an operating point.
+
+The schedule builders (``core.schedule``) emit ops that carry **work**
+(MAC counts, port words, DMA bits — :class:`~repro.core.schedule.OpWork`)
+instead of baked durations.  A *cost model* turns that work into seconds,
+which is what makes timing frequency-dependent: under DVFS the compute
+and bank-port clocks stretch while the eDRAM retention deadlines — a
+wall-clock, temperature-set leakage phenomenon (CAMEL §VI-D, Fig 22) —
+do not.  Refresh hiding and the refresh-free verdict therefore change
+across operating points (see ``sim.sweep(freqs=...)``).
+
+Two models ship:
+
+:class:`FixedClock`
+    The default — one fixed frequency (the arm's ``SystemConfig.freq_hz``
+    unless overridden), nominal energy.  Bit-identical to the pre-cost-
+    model pipeline at 500 MHz (golden-pinned in tests/test_cost.py).
+:class:`DVFSState`
+    A frequency/voltage operating point.  Compute time scales ∝ 1/f;
+    *dynamic* compute energy scales with the supply, (V/V_nom)² per MAC
+    (dynamic power ∝ V²f — for fixed work the f cancels).  The memory
+    macro stays on its characterized 0.8 V rail: access/refresh pJ/bit
+    and the retention curve are **not** rescaled, i.e. leakage and
+    retention are held in wall-clock.
+
+Anything with ``resolve(system) -> OperatingPoint`` plugs in
+(:class:`CostModel` protocol); richer models can subclass
+:class:`OperatingPoint` and override :meth:`OperatingPoint.op_seconds`
+for non-linear work→time laws.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+from repro.core.schedule import Op, OpWork
+
+#: reference rails for the shipped models (paper's eDRAM point, §V-D)
+VDD_NOM = 0.8
+FREQ_NOM = 500e6
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """A resolved operating point: the clock every on-chip timing quantity
+    is priced against, plus the dynamic-energy multiplier on compute.
+
+    ``freq_hz`` drives op compute time (via the effective MAC rate), bank
+    port service time, and refresh pulse duration; ``offchip_bw_bps`` is
+    the wall-clock DMA bandwidth (does not scale with the core clock).
+    """
+    freq_hz: float
+    compute_scale: float = 1.0     # × on MAC pJ (dynamic, ∝ V²)
+    offchip_bw_bps: float = 0.0    # wall-clock DMA bandwidth (bits/s)
+    label: str = "fixed"
+
+    def op_seconds(self, work: OpWork, mac_rate_s: float) -> float:
+        """Seconds one op's ``work`` takes at this point.
+
+        ``mac_rate_s`` is the effective MAC/s of the systolic array *at
+        this point's clock* (``core.lifetime.array_throughput``).  The op
+        finishes when its slowest work component does: MAC stream, any
+        explicit port words (one word/cycle), and any off-chip DMA
+        payload at wall-clock bandwidth.
+        """
+        mac_s = work.macs / mac_rate_s if mac_rate_s > 0.0 else 0.0
+        port_s = (work.port_words / self.freq_hz
+                  if self.freq_hz > 0.0 else 0.0)
+        dma_s = (work.dma_bits / self.offchip_bw_bps
+                 if work.dma_bits and self.offchip_bw_bps > 0.0 else 0.0)
+        return max(mac_s, port_s, dma_s)
+
+
+@runtime_checkable
+class CostModel(Protocol):
+    """The pluggable contract: resolve a ``SystemConfig`` into an
+    :class:`OperatingPoint`.  Implementations must be frozen/picklable
+    dataclasses so arms carrying them cross the ``sim.sweep`` process
+    pool."""
+
+    def resolve(self, system) -> OperatingPoint:        # pragma: no cover
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedClock:
+    """The default cost model: one fixed clock, nominal energy.
+
+    ``freq_hz=None`` reads the arm's ``SystemConfig.freq_hz`` (the one
+    sanctioned consumer of that field — see the deprecation note in
+    ``core.hwmodel``); a float pins a different clock at nominal voltage
+    (pure underclock/overclock, no voltage scaling).
+    """
+    freq_hz: Optional[float] = None
+
+    def resolve(self, system) -> OperatingPoint:
+        f = self.freq_hz if self.freq_hz is not None else system.freq_hz
+        if f <= 0.0:
+            raise ValueError(f"FixedClock needs a positive clock, got {f}")
+        return OperatingPoint(freq_hz=f, compute_scale=1.0,
+                              offchip_bw_bps=system.offchip_bw_bps,
+                              label=f"fixed@{f / 1e6:.0f}MHz")
+
+
+@dataclasses.dataclass(frozen=True)
+class DVFSState:
+    """A DVFS operating point: frequency + supply voltage.
+
+    ``vdd=None`` follows a modeled linear f–V curve with a near-threshold
+    floor: ``V = V_nom · (floor + (1 − floor) · f / f_nom)``.  Dynamic
+    compute energy scales ``(V/V_nom)²``; leakage-driven quantities (the
+    retention curve, hence refresh deadlines and refresh energy per
+    wall-clock second) are deliberately *not* rescaled — the eDRAM macro
+    stays at its characterized rail.
+    """
+    freq_hz: float
+    vdd: Optional[float] = None
+    vdd_nom: float = VDD_NOM
+    freq_nom: float = FREQ_NOM
+    vdd_floor: float = 0.45        # fraction of vdd_nom as f → 0
+
+    def voltage(self) -> float:
+        """The resolved supply (V) at this point."""
+        if self.vdd is not None:
+            return self.vdd
+        frac = self.vdd_floor + (1.0 - self.vdd_floor) * (
+            self.freq_hz / self.freq_nom)
+        return self.vdd_nom * frac
+
+    def resolve(self, system) -> OperatingPoint:
+        if self.freq_hz <= 0.0:
+            raise ValueError(
+                f"DVFSState needs a positive clock, got {self.freq_hz}")
+        v = self.voltage()
+        return OperatingPoint(freq_hz=self.freq_hz,
+                              compute_scale=(v / self.vdd_nom) ** 2,
+                              offchip_bw_bps=system.offchip_bw_bps,
+                              label=f"dvfs@{self.freq_hz / 1e6:.0f}MHz/"
+                                    f"{v:.2f}V")
+
+
+def resolve_cost(cost: Optional[CostModel], system) -> OperatingPoint:
+    """The operating point an arm's ``cost`` policy implies
+    (``None`` → :class:`FixedClock` at the system's nominal clock)."""
+    return (cost if cost is not None else FixedClock()).resolve(system)
+
+
+def op_timer(point: OperatingPoint,
+             mac_rate_s: float) -> Callable[[Op], float]:
+    """The per-op work→seconds resolver ``core.schedule.simulate``
+    consumes: explicit ``Op.duration_s`` pins win (legacy ops), all other
+    ops are priced by ``point.op_seconds`` at ``mac_rate_s``."""
+    def seconds(op: Op) -> float:
+        if op.duration_s is not None:
+            return op.duration_s
+        return point.op_seconds(op.work, mac_rate_s)
+    return seconds
+
+
+def cost_dict(cost: Optional[CostModel]) -> dict:
+    """JSON-safe description of a cost model for ``ArmReport.config``."""
+    model = cost if cost is not None else FixedClock()
+    d = dataclasses.asdict(model) if dataclasses.is_dataclass(model) else {}
+    return {"model": type(model).__name__, **d}

@@ -1,15 +1,21 @@
 """The staged simulation pipeline behind ``sim.run``.
 
-Every arm flows through the same four stages::
+Every arm flows through the same five stages::
 
-    schedule  — build the iteration's op schedule (reversible pattern or
-                whole-iteration activation buffering) and simulate it
+    schedule  — resolve blocks and build the iteration's op stream
+                (reversible pattern or whole-iteration activation
+                buffering); ops carry *work*, not durations
+    cost      — resolve the arm's cost model (``repro.sim.cost``) into an
+                operating point and time the op stream: work → seconds at
+                the point's clock, then simulate the timed schedule
     trace     — flatten the schedule onto one trace timeline; aggregate
                 traffic, peak-live and lifetime numbers
     memory    — replay the trace through the bank-level ``repro.memory``
                 controller (eDRAM banks, or the SRAM baseline's banks with
-                an infinite retention floor and off-chip spills)
-    energy    — systolic-array compute energy, scalar cross-validation
+                an infinite retention floor and off-chip spills) at the
+                cost model's clock; retention deadlines stay wall-clock
+    energy    — systolic-array compute energy (scaled by the operating
+                point's dynamic-energy factor), scalar cross-validation
                 oracle, latency/TTA/ETA; assembles the ArmReport
 
 Stages are pluggable: each is a ``(name, fn(arm, ctx))`` pair and
@@ -34,6 +40,7 @@ from repro.core import schedule as sc
 from repro.core.lifetime import array_throughput
 from repro.memory import trace as mtr
 from repro.sim.arm import Arm
+from repro.sim.cost import FixedClock, cost_dict, op_timer, resolve_cost
 from repro.sim.report import ArmReport
 
 # the SRAM tier stores FP16 values; one value per word
@@ -46,7 +53,11 @@ class SimContext:
     and write whichever fields they need."""
     blocks: tuple = ()
     bits: float = 0.0              # bits per value (BFP on eDRAM, FP16 else)
-    R: float = 0.0                 # effective MAC/s
+    specs: tuple = ()              # flattened OpSpecs (utilization inputs)
+    cost: object = None            # resolved OperatingPoint (cost stage)
+    freq_hz: float = 0.0           # the operating point's clock
+    compute_scale: float = 1.0     # dynamic-energy multiplier on compute
+    R: float = 0.0                 # effective MAC/s at the operating point
     batch: float = 1.0
     fwd: object = None             # SimResult (reversible pattern)
     bwd: object = None
@@ -69,20 +80,35 @@ class SimContext:
 # ------------------------------------------------------------------ stages
 
 def stage_schedule(arm: Arm, ctx: SimContext) -> None:
-    """Build and simulate the iteration's op schedule."""
+    """Resolve the workload: blocks, value width, utilization specs.
+    Timing is deliberately absent — the ``cost`` stage owns work→seconds."""
     cfg = arm.system
     blocks = arm.resolve_blocks()
     ctx.blocks = blocks
     ctx.bits = hw.BFP_BITS if cfg.use_edram else hw.FP16_BITS
-    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
-    ctx.R = array_throughput(cfg.array, cfg.freq_hz, specs, cfg.bfp_group)
+    ctx.specs = tuple(s for b in blocks for s in (b.f1, b.f2, b.g))
     ctx.batch = max(blocks[0].f1.batch, 1)
+
+
+def stage_cost(arm: Arm, ctx: SimContext) -> None:
+    """Resolve the arm's cost model into an operating point and time the
+    op stream: every downstream second — op durations, bank-port service,
+    refresh pulse widths — derives from this point's clock, while
+    retention deadlines stay wall-clock (temperature-set)."""
+    cfg = arm.system
+    point = resolve_cost(arm.cost, cfg)
+    ctx.cost = point
+    ctx.freq_hz = point.freq_hz
+    ctx.compute_scale = point.compute_scale
+    ctx.R = array_throughput(cfg.array, point.freq_hz, list(ctx.specs),
+                             cfg.bfp_group)
+    seconds = op_timer(point, ctx.R)
     if arm.reversible:
         ctx.fwd, ctx.bwd = sc.simulate_training_iteration(
-            blocks, ctx.R, ctx.bits)
+            ctx.blocks, ctx.R, ctx.bits, op_seconds=seconds)
     else:
         ctx.combined = sc.simulate_irreversible_iteration(
-            blocks, ctx.R, ctx.bits)
+            ctx.blocks, ctx.R, ctx.bits, op_seconds=seconds)
 
 
 def stage_trace(arm: Arm, ctx: SimContext) -> None:
@@ -155,7 +181,7 @@ def stage_memory(arm: Arm, ctx: SimContext) -> None:
     ctx.controller = mtr.replay(
         ctx.events, mem_cfg, temp_c=cfg.temp_c, duration_s=ctx.duration_s,
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
-        freq_hz=cfg.freq_hz, sample_scale=ctx.batch,
+        freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         op_durations=ctx.op_durations, retention_s=retention)
 
 
@@ -224,15 +250,15 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
     """Compute energy + latency accounting; assembles the ArmReport."""
     cfg = arm.system
     blocks = ctx.blocks
-    specs = [s for b in blocks for s in (b.f1, b.f2, b.g)]
     # gradient ops (U1a/U1w/U2a/U2w); the reversible arm also pays the
     # eq-2 input recompute (the paper's accepted overhead, §III)
-    macs = sum(s.macs for s in specs) + sum(
+    macs = sum(s.macs for s in ctx.specs) + sum(
         b.f1.macs_out * 2 + b.f2.macs_out * 2 for b in blocks)
     if arm.reversible:
         macs += sum(b.f1.macs_out + b.f2.macs_out for b in blocks)
+    # dynamic compute energy at the operating point (∝ V², ×1.0 fixed)
     compute_j = macs * (cfg.mac_pj if cfg.use_edram
-                        else cfg.mac_pj_fp16) * 1e-12
+                        else cfg.mac_pj_fp16) * 1e-12 * ctx.compute_scale
 
     scalar_mem, scalar_offchip, rf_scalar = _scalar_memory(arm, ctx)
     ctrl = ctx.controller
@@ -276,6 +302,9 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
         timing=ctrl.timing if ctrl is not None else "scalar",
         refresh_stall_s=ctrl.refresh_stall_s if ctrl is not None else 0.0,
         refresh_hidden_j=ctrl.refresh_hidden_j if ctrl is not None else 0.0,
+        freq_hz=ctx.freq_hz or cfg.freq_hz,
+        pulse_exceeds_retention=(ctrl.pulse_exceeds_retention
+                                 if ctrl is not None else False),
         timeline=(dict(ctrl.timeline)
                   if ctrl is not None and ctrl.timeline else {}),
         config=_config_dict(arm),
@@ -290,6 +319,7 @@ def _config_dict(arm: Arm) -> dict:
         "name": arm.name,
         "reversible": arm.reversible,
         "iters_to_target": arm.iters_to_target,
+        "cost": cost_dict(arm.cost),
         "system": dataclasses.asdict(arm.system),
         "workload": (dataclasses.asdict(arm.workload)
                      if arm.workload is not None and arm.blocks is None
@@ -310,6 +340,13 @@ def _memory_dict(ctrl) -> dict:
         "alloc_policy": ctrl.alloc_policy,
         "temp_c": ctrl.temp_c,
         "duration_s": ctrl.duration_s,
+        # strict-JSON safety: math.inf (SRAM's never-refresh floor) is not
+        # representable in plain JSON, so it serializes as null
+        "retention_s": (ctrl.retention_s
+                        if math.isfinite(ctrl.retention_s) else None),
+        "interval_s": (ctrl.interval_s
+                       if math.isfinite(ctrl.interval_s) else None),
+        "pulse_exceeds_retention": ctrl.pulse_exceeds_retention,
         "read_j": ctrl.read_j,
         "write_j": ctrl.write_j,
         "refresh_j": ctrl.refresh_j,
@@ -336,6 +373,7 @@ Stage = Tuple[str, Callable[[Arm, SimContext], None]]
 
 DEFAULT_STAGES: Tuple[Stage, ...] = (
     ("schedule", stage_schedule),
+    ("cost", stage_cost),
     ("trace", stage_trace),
     ("memory", stage_memory),
     ("energy", stage_energy),
@@ -360,9 +398,9 @@ class Pipeline:
         """Replace stage ``name`` with ``fn(arm, ctx)``.
 
         Args:
-            name: an existing stage name (``schedule`` / ``trace`` /
-                ``memory`` / ``energy`` on the default pipeline);
-                ``KeyError`` if absent.
+            name: an existing stage name (``schedule`` / ``cost`` /
+                ``trace`` / ``memory`` / ``energy`` on the default
+                pipeline); ``KeyError`` if absent.
             fn: callable ``(arm: Arm, ctx: SimContext) -> None`` that
                 mutates ``ctx`` in place — e.g. set ``ctx.controller`` to
                 a custom ``ControllerReport`` (this is how the timeline
@@ -448,9 +486,18 @@ def run(arm: Arm, pipeline: Optional[Pipeline] = None, *,
     return report
 
 
-def _expand_grid(arms: Sequence[Arm], workloads, temps) -> list:
-    """``arms × workloads × temps`` as concrete arms, in deterministic
-    (arms-outer, temps-inner) order."""
+def _with_freq(arm: Arm, f) -> Arm:
+    """One frequency-axis grid point: a number pins a ``FixedClock`` at
+    that many Hz; a cost model (anything with ``resolve``) is installed
+    as-is — e.g. a ``DVFSState`` for voltage-scaled points."""
+    if hasattr(f, "resolve"):
+        return arm.with_cost(f)
+    return arm.with_cost(FixedClock(freq_hz=float(f)))
+
+
+def _expand_grid(arms: Sequence[Arm], workloads, temps, freqs) -> list:
+    """``arms × workloads × temps × freqs`` as concrete arms, in
+    deterministic (arms-outer, freqs-inner) order."""
     out = []
     for arm in arms:
         for wl in (workloads if workloads is not None else (None,)):
@@ -461,7 +508,9 @@ def _expand_grid(arms: Sequence[Arm], workloads, temps) -> list:
             else:                       # a WorkloadSpec replaces wholesale
                 a = dataclasses.replace(arm, workload=wl, blocks=None)
             for t in (temps if temps is not None else (None,)):
-                out.append(a if t is None else a.with_system(temp_c=t))
+                at = a if t is None else a.with_system(temp_c=t)
+                for f in (freqs if freqs is not None else (None,)):
+                    out.append(at if f is None else _with_freq(at, f))
     return out
 
 
@@ -476,6 +525,7 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
           timing: Optional[str] = None,
           workloads: Optional[Sequence] = None,
           temps: Optional[Sequence[float]] = None,
+          freqs: Optional[Sequence] = None,
           parallel=None) -> list:
     """Simulate a grid of arms; one :class:`ArmReport` per grid point.
 
@@ -489,16 +539,22 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
             ``WorkloadSpec`` (replaces the arm's workload) or a dict of
             ``WorkloadSpec`` field overrides (``with_workload``).
         temps: optional die-temperature axis (°C, ``with_system``).
+        freqs: optional operating-point axis — each entry is a frequency
+            in Hz (installs ``FixedClock(freq_hz=...)``) or a cost model
+            (e.g. ``DVFSState``; installed via ``Arm.with_cost``).
+            Retention deadlines stay wall-clock, so refresh hiding and
+            the refresh-free verdict move across this axis.
         parallel: ``None``/``0``/``1`` → sequential; ``True`` → one
             worker per CPU; an int → that many process-pool workers.
 
     Returns:
         Reports in deterministic grid order — ``arms`` outermost, then
-        ``workloads``, then ``temps`` — identical regardless of
-        ``parallel`` (results are collected in submission order).
+        ``workloads``, then ``temps``, then ``freqs`` — identical
+        regardless of ``parallel`` (results are collected in submission
+        order).
     """
     resolve_pipeline(timing, pipeline)      # validate eagerly
-    grid = _expand_grid(arms, workloads, temps)
+    grid = _expand_grid(arms, workloads, temps, freqs)
     jobs = [(a, timing, pipeline) for a in grid]
     workers = (os.cpu_count() or 1) if parallel is True else int(parallel or 0)
     if workers > 1 and len(jobs) > 1:

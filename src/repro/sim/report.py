@@ -44,6 +44,13 @@ class ArmReport:
     # hidden ones is refresh_hidden_j (J) — charged, but costing no time
     refresh_stall_s: float = 0.0
     refresh_hidden_j: float = 0.0
+    # the resolved operating point's clock (Hz) — the arm's cost model
+    # decides it (FixedClock at SystemConfig.freq_hz by default); 0.0 on
+    # records written before the cost-model API
+    freq_hz: float = 0.0
+    # some bank's refresh pulse outlasts its (wall-clock) retention
+    # interval: refresh there can never hide under compute
+    pulse_exceeds_retention: bool = False
     # timeline-model summary (makespan, pushback, pulse placement counts);
     # empty dict under additive/scalar timing
     timeline: dict = dataclasses.field(default_factory=dict)
@@ -59,7 +66,8 @@ class ArmReport:
                 "memory_j", "scalar_memory_j", "oracle_rel_err", "stall_s",
                 "max_lifetime_s", "refresh_free", "peak_live_bits",
                 "offchip_bits", "iters_to_target", "tta_s", "eta_j",
-                "timing", "refresh_stall_s", "refresh_hidden_j")
+                "timing", "refresh_stall_s", "refresh_hidden_j",
+                "freq_hz", "pulse_exceeds_retention")
 
     def to_dict(self) -> dict:
         """Plain-JSON form (drops the live ``controller`` object)."""

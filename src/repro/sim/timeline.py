@@ -28,9 +28,16 @@ Refresh preemption is charged as a serialized tail rather than re-fed
 into op start times (a second-order effect — an unhidden pulse is rare
 and short next to an op); energy accounting is shared verbatim with the
 additive model, so ``refresh_j``/``read_j``/``write_j`` agree bit-for-bit
-between the two timings and only *time* moves.  The DVFS interaction
-(variable op latency vs idle-window placement) is an open question — see
-ROADMAP.
+between the two timings and only *time* moves.
+
+Op durations, port service times and pulse widths all derive from the
+arm's cost model (``repro.sim.cost`` — the pipeline's ``cost`` stage),
+while retention deadlines stay wall-clock: under DVFS the idle windows
+stretch/shrink against fixed deadlines, so pulse placement, the hiding
+rate, and the refresh-free verdict are frequency-dependent
+(``sim.sweep(freqs=...)`` sweeps this).  A bank whose pulse is longer
+than its retention interval can never hide — surfaced as
+``pulse_exceeds_retention`` instead of silently stalling every interval.
 """
 from __future__ import annotations
 
@@ -139,7 +146,7 @@ def stage_timeline(arm: Arm, ctx: SimContext) -> None:
         ctx.events, mem_cfg, op_schedule=ctx.op_schedule,
         temp_c=cfg.temp_c, duration_s=ctx.duration_s,
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
-        freq_hz=cfg.freq_hz, sample_scale=ctx.batch,
+        freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         retention_s=retention)
 
 

@@ -1,0 +1,386 @@
+"""The pluggable cost-model / DVFS API (repro.sim.cost): the work/time
+split on ops, FixedClock golden-pinned to the PR-3 timeline results,
+frequency-scaling properties (compute time ∝ 1/f, wall-clock refresh
+invariants), the DVFS energy model, the sweep ``freqs`` axis, and the
+``pulse_exceeds_retention`` surfacing."""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro import sim
+from repro.core import edram as ed
+from repro.core import schedule as sc
+from repro.core.schedule import Op, OpWork, TraceEvent
+from repro.sim.cost import (DVFSState, FixedClock, OperatingPoint,
+                            cost_dict, op_timer, resolve_cost)
+from repro.sim.timeline import replay_timeline
+
+WORD = ed.EDRAMConfig().word_bits
+
+
+# ------------------------------------------------ ops carry work, not time
+
+def test_op_duration_is_derived_from_work():
+    op = Op("X", OpWork(macs=10.0), ("a",), ("b",), rate=5.0)
+    assert op.duration == pytest.approx(2.0)
+    assert op.work.macs == 10.0
+    # zero-work (fused) ops are free at any rate
+    assert Op("Z", OpWork(), (), ()).duration == 0.0
+    # MAC work without a baseline rate must fail loudly, not yield an
+    # all-zero schedule
+    with pytest.raises(ValueError, match="no baseline rate"):
+        Op("Y", OpWork(macs=10.0), (), ()).duration
+
+
+def test_op_legacy_positional_construction_still_works():
+    """Pre-cost-model code built Op(name, seconds, reads, writes); the
+    number is captured as an explicit duration_s pin."""
+    op = Op("X", 1.5e-6, ("a",), ("b",))
+    assert op.duration == pytest.approx(1.5e-6)
+    assert op.duration_s == pytest.approx(1.5e-6)
+    assert op.work == OpWork()
+    # explicit pins win over work-based pricing in the op timer too
+    fn = op_timer(OperatingPoint(freq_hz=1e6), mac_rate_s=1e6)
+    assert fn(op) == pytest.approx(1.5e-6)
+
+
+def test_builders_emit_mac_work():
+    blocks = sim.WorkloadSpec(n_blocks=2, batch=4,
+                              c_branch=8, c_backbone=16).blocks()
+    ops = sc.forward_ops(blocks, 1e12)
+    by_name = {op.name: op for op in ops}
+    assert by_name["G0"].work.macs == blocks[0].g.macs
+    assert by_name["G0"].duration == pytest.approx(blocks[0].g.macs / 1e12)
+    assert by_name["ADD1_0"].work.macs == 0.0      # fused elementwise op
+    # graph construction still sees durations via the property
+    g = sc.dependency_graph(ops + sc.backward_ops(blocks, 1e12))
+    assert g.number_of_nodes() == 2 * 16
+
+
+def test_simulate_op_seconds_hook_retimes_the_schedule():
+    blocks = sim.WorkloadSpec(n_blocks=2, batch=4,
+                              c_branch=8, c_backbone=16).blocks()
+    base = sc.simulate(sc.forward_ops(blocks, 1e12), blocks)
+    slow = sc.simulate(sc.forward_ops(blocks, 1e12), blocks,
+                       op_seconds=lambda op: 2.0 * op.duration)
+    assert slow.total_time == pytest.approx(2.0 * base.total_time)
+    assert slow.max_lifetime == pytest.approx(2.0 * base.max_lifetime)
+
+
+# --------------------------------------------------------- model resolution
+
+def test_fixedclock_resolves_system_nominal_clock():
+    cfg = sim.get_arm("DuDNN+CAMEL").system
+    point = resolve_cost(None, cfg)
+    assert point.freq_hz == cfg.freq_hz
+    assert point.compute_scale == 1.0
+    assert resolve_cost(FixedClock(freq_hz=1e8), cfg).freq_hz == 1e8
+    with pytest.raises(ValueError, match="positive clock"):
+        FixedClock(freq_hz=0.0).resolve(cfg)
+
+
+def test_dvfs_voltage_curve_and_energy_scale():
+    cfg = sim.get_arm("DuDNN+CAMEL").system
+    nominal = DVFSState(freq_hz=500e6).resolve(cfg)
+    assert nominal.compute_scale == pytest.approx(1.0)
+    half = DVFSState(freq_hz=250e6)
+    # linear f-V curve with floor: V = 0.8·(0.45 + 0.55·0.5)
+    assert half.voltage() == pytest.approx(0.8 * 0.725)
+    assert half.resolve(cfg).compute_scale == pytest.approx(0.725 ** 2)
+    # explicit vdd wins
+    pinned = DVFSState(freq_hz=250e6, vdd=0.8).resolve(cfg)
+    assert pinned.compute_scale == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="positive clock"):
+        DVFSState(freq_hz=-1.0).resolve(cfg)
+
+
+def test_operating_point_prices_all_work_kinds():
+    point = OperatingPoint(freq_hz=100.0, offchip_bw_bps=1000.0)
+    assert point.op_seconds(OpWork(macs=50.0), 10.0) == pytest.approx(5.0)
+    assert point.op_seconds(OpWork(port_words=200.0), 1e12) == \
+        pytest.approx(2.0)
+    assert point.op_seconds(OpWork(dma_bits=3000.0), 1e12) == \
+        pytest.approx(3.0)
+    # an op finishes when its slowest component does
+    assert point.op_seconds(
+        OpWork(macs=50.0, port_words=200.0, dma_bits=3000.0),
+        10.0) == pytest.approx(5.0)
+
+
+def test_cost_model_serializes_into_config():
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL"))
+    assert rep.config["cost"] == {"model": "FixedClock", "freq_hz": None}
+    dv = sim.run(sim.get_arm("DuDNN+CAMEL").with_cost(
+        DVFSState(freq_hz=250e6)))
+    assert dv.config["cost"]["model"] == "DVFSState"
+    assert dv.config["cost"]["freq_hz"] == 250e6
+    assert dv.freq_hz == 250e6
+    json.dumps(dv.to_dict())                   # JSON-safe
+    assert cost_dict(None) == {"model": "FixedClock", "freq_hz": None}
+
+
+# ------------------------------------- FixedClock ≡ PR-3 timeline (golden)
+
+# captured from the PR-3 default pipeline (timing="timeline", seed
+# workloads) immediately before the cost-model redesign; the FixedClock
+# default must keep reproducing them bit-for-bit
+PR3_TIMELINE_GOLDEN = {
+    "DuDNN+CAMEL": dict(latency_s=0.0010118656680769748,
+                        energy_j=5.0440828927999996e-05,
+                        memory_j=4.921161727999997e-06,
+                        stall_s=0.00013932778681588595,
+                        refresh_stall_s=0.0,
+                        refresh_hidden_j=0.0,
+                        offchip_bits=0.0),
+    "FR+SRAM": dict(latency_s=0.011900566588235295,
+                    energy_j=0.00021226073702399994,
+                    memory_j=0.00010618365542399993,
+                    stall_s=0.01007778890322581,
+                    refresh_stall_s=0.0,
+                    refresh_hidden_j=0.0,
+                    offchip_bits=43352064.0),
+    "CA+CAMEL": dict(latency_s=0.0010118656680769748,
+                     energy_j=5.0440828927999996e-05,
+                     memory_j=4.921161727999997e-06,
+                     stall_s=0.00013932778681588595,
+                     refresh_stall_s=0.0,
+                     refresh_hidden_j=0.0,
+                     offchip_bits=0.0),
+    "BO+CAMEL": dict(latency_s=0.0010118656680769748,
+                     energy_j=5.0440828927999996e-05,
+                     memory_j=4.921161727999997e-06,
+                     stall_s=0.00013932778681588595,
+                     refresh_stall_s=0.0,
+                     refresh_hidden_j=0.0,
+                     offchip_bits=0.0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PR3_TIMELINE_GOLDEN))
+def test_fixedclock_reproduces_pr3_timeline_golden(name):
+    """ISSUE acceptance: sim.run(arm) with the default FixedClock
+    reproduces the PR-3 timeline reports bit-identically."""
+    rep = sim.run(sim.get_arm(name))
+    assert rep.timing == "timeline"
+    assert rep.freq_hz == 500e6
+    for field, want in PR3_TIMELINE_GOLDEN[name].items():
+        assert getattr(rep, field) == pytest.approx(want, rel=1e-12), field
+    # an explicit FixedClock at the nominal point is the same simulation
+    explicit = sim.run(sim.get_arm(name).with_cost(FixedClock()))
+    assert explicit.to_dict() == rep.to_dict()
+
+
+def test_fixedclock_hot_arm_pulse_placement_golden():
+    """The hot-arm hiding numbers (PR-3) under the default cost model."""
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime")
+    rep = sim.run(arm)
+    assert rep.latency_s == pytest.approx(0.001388870859287565, rel=1e-12)
+    assert rep.refresh_stall_s == pytest.approx(0.0003039199999999991,
+                                               rel=1e-12)
+    assert (rep.timeline["pulses"], rep.timeline["pulses_hidden"]) == \
+        (320, 175)
+
+
+# -------------------------------------- frequency scaling (wall-clock laws)
+
+def test_halving_frequency_doubles_compute_time_exactly():
+    """Scaling frequency by k scales compute/schedule time by 1/k (and
+    exactly, for a power-of-two k) while FixedClock compute energy is
+    frequency-invariant."""
+    base = sim.run(sim.get_arm("DuDNN+CAMEL"))
+    half = sim.run(sim.get_arm("DuDNN+CAMEL").with_cost(
+        FixedClock(freq_hz=250e6)))
+    assert half.timeline["schedule_s"] == 2.0 * base.timeline["schedule_s"]
+    assert half.max_lifetime_s == 2.0 * base.max_lifetime_s
+    assert half.compute_j == base.compute_j        # no voltage scaling
+    assert half.freq_hz == 250e6
+
+
+def test_refresh_energy_is_wall_clock_invariant_under_scaling():
+    """Retention deadlines are wall-clock: halving the clock exactly
+    doubles the iteration's wall time and with it the refresh energy —
+    i.e. refresh *power* (J per wall-clock second) is invariant, and the
+    retention floor / refresh interval do not move."""
+    hot = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, refresh_policy="always")
+    base = sim.run(hot)
+    half = sim.run(hot.with_cost(FixedClock(freq_hz=250e6)))
+    assert half.memory["refresh_j"] == 2.0 * base.memory["refresh_j"]
+    assert half.memory["retention_s"] == base.memory["retention_s"] \
+        == ed.retention_s(100.0)
+    assert half.memory["interval_s"] == base.memory["interval_s"]
+    # energy moved with wall time, not with the electrical constants
+    assert half.memory["refresh_j"] / half.timeline["schedule_s"] == \
+        pytest.approx(base.memory["refresh_j"]
+                      / base.timeline["schedule_s"])
+
+
+def test_refresh_free_verdict_flips_across_operating_points():
+    """ISSUE headline: the refresh-free verdict is frequency-dependent —
+    data lifetimes stretch with 1/f past the (fixed) retention floor."""
+    arm = sim.get_arm("DuDNN+CAMEL")          # 60 °C seed point
+    fast = sim.run(arm)
+    slow = sim.run(arm.with_cost(FixedClock(freq_hz=125e6)))
+    assert fast.refresh_free
+    assert not slow.refresh_free
+    assert slow.memory["refresh_j"] > 0.0
+    assert slow.memory["retention_s"] == fast.memory["retention_s"]
+
+
+def test_hiding_rate_degrades_as_the_clock_drops():
+    """Pulse widths scale with 1/f against fixed deadlines: the hot arm
+    hides fewer pulses (eventually none) as frequency falls."""
+    hot = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, alloc_policy="lifetime")
+    fast = sim.run(hot)
+    slow = sim.run(hot.with_cost(FixedClock(freq_hz=250e6)))
+    fast_rate = fast.timeline["pulses_hidden"] / fast.timeline["pulses"]
+    slow_rate = slow.timeline["pulses_hidden"] / slow.timeline["pulses"]
+    assert fast_rate > slow_rate
+    assert slow.pulse_exceeds_retention        # pulses outgrew the interval
+    assert not fast.pulse_exceeds_retention
+
+
+def test_dvfs_trades_energy_for_time():
+    """DVFS at half clock: slower iteration, cheaper compute (∝ V²),
+    refresh/memory accounting unchanged vs a plain underclock."""
+    base = sim.run(sim.get_arm("DuDNN+CAMEL"))
+    under = sim.run(sim.get_arm("DuDNN+CAMEL").with_cost(
+        FixedClock(freq_hz=250e6)))
+    dvfs = sim.run(sim.get_arm("DuDNN+CAMEL").with_cost(
+        DVFSState(freq_hz=250e6)))
+    assert dvfs.latency_s == under.latency_s
+    assert dvfs.compute_j == pytest.approx(base.compute_j * 0.725 ** 2)
+    assert dvfs.compute_j < base.compute_j
+    assert dvfs.memory_j == under.memory_j     # macro rail not rescaled
+
+
+# -------------------------------------------------- the sweep freqs axis
+
+def _small(name):
+    return sim.get_arm(name).with_workload(n_blocks=2, batch=4,
+                                           c_branch=8, c_backbone=16)
+
+
+def test_sweep_freqs_axis_order_and_values():
+    arms = [_small("DuDNN+CAMEL"), _small("FR+SRAM")]
+    reports = sim.sweep(arms, freqs=[500e6, 250e6])
+    assert [r.arm for r in reports] == \
+        ["DuDNN+CAMEL"] * 2 + ["FR+SRAM"] * 2
+    assert [r.freq_hz for r in reports] == [500e6, 250e6, 500e6, 250e6]
+    # frequency-dependent timing, wall-clock-invariant deadlines
+    assert reports[1].latency_s > reports[0].latency_s
+    assert reports[1].memory["retention_s"] == \
+        reports[0].memory["retention_s"]
+
+
+def test_sweep_freqs_accepts_cost_models():
+    reports = sim.sweep([_small("DuDNN+CAMEL")],
+                        freqs=[250e6, DVFSState(freq_hz=250e6)])
+    fixed, dvfs = reports
+    assert fixed.config["cost"]["model"] == "FixedClock"
+    assert dvfs.config["cost"]["model"] == "DVFSState"
+    assert fixed.latency_s == dvfs.latency_s
+    assert dvfs.compute_j < fixed.compute_j
+
+
+def test_parallel_freq_sweep_matches_sequential():
+    """ISSUE acceptance: sweep(freqs=..., parallel=N) == sequential."""
+    arms = [_small("DuDNN+CAMEL"), _small("FR+SRAM")]
+    kw = dict(temps=(60.0, 100.0), freqs=(500e6, 250e6))
+    seq = sim.sweep(arms, **kw)
+    par = sim.sweep(arms, parallel=2, **kw)
+    assert len(seq) == len(par) == 8
+    assert [r.to_dict() for r in seq] == [r.to_dict() for r in par]
+
+
+def test_frequency_sweep_moves_refresh_stall_and_hidden_energy():
+    """ISSUE acceptance: sweep(freqs=[f1, f2]) yields frequency-dependent
+    refresh_stall_s / refresh_hidden_j with retention unchanged."""
+    hot = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, alloc_policy="lifetime")
+    f1, f2 = sim.sweep([hot], freqs=[500e6, 250e6])
+    assert f1.refresh_stall_s != f2.refresh_stall_s
+    assert f1.refresh_hidden_j != f2.refresh_hidden_j
+    assert f1.memory["retention_s"] == f2.memory["retention_s"]
+    assert f1.memory["interval_s"] == f2.memory["interval_s"]
+
+
+# ------------------------------------------- pulse_exceeds_retention flag
+
+def test_pulse_exceeds_retention_flag_on_saturated_bank():
+    """A near-full bank at 60 °C: 8 µs pulse > 6.7 µs interval — the
+    report flags the can-never-hide case instead of leaving only a
+    silent per-interval stall."""
+    cfg = ed.EDRAMConfig()
+    words = 4000
+    events = [TraceEvent(0.0, "BIG", "big", "write", WORD * words),
+              TraceEvent(0.0, "BIG", "big", "read", WORD * words)]
+    schedule = [("BIG", 0.0, 10e-6)]
+    rep = replay_timeline(events, cfg, op_schedule=schedule, temp_c=60.0,
+                          duration_s=10e-6, refresh_policy="always",
+                          alloc_policy="first_fit", freq_hz=500e6)
+    assert rep.pulse_exceeds_retention
+    flagged = [b for b in rep.banks if b.pulse_exceeds_retention]
+    assert flagged and all(b.refreshed for b in flagged)
+    assert rep.timeline["pulses_hidden"] == 0
+    # the same geometry with a clock fast enough to squeeze the pulse
+    # under the interval is not flagged
+    fast = replay_timeline(events, cfg, op_schedule=schedule, temp_c=60.0,
+                           duration_s=10e-6, refresh_policy="always",
+                           alloc_policy="first_fit", freq_hz=5e9)
+    assert not fast.pulse_exceeds_retention
+
+
+def test_pulse_flag_roundtrips_through_report_json():
+    hot = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, alloc_policy="lifetime").with_cost(
+        FixedClock(freq_hz=250e6))
+    rep = sim.run(hot)
+    assert rep.pulse_exceeds_retention
+    back = sim.ArmReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back == rep
+    assert back.pulse_exceeds_retention
+    assert back.memory["pulse_exceeds_retention"]
+    assert any(b["pulse_exceeds_retention"] for b in back.memory["banks"])
+
+
+def test_sram_replay_reports_null_retention_and_strict_json():
+    """SRAM's never-refresh floor is math.inf on the live controller but
+    must serialize as null — the report's JSON form stays strict-JSON
+    (no Infinity tokens)."""
+    rep = sim.run(sim.get_arm("FR+SRAM"))
+    assert math.isinf(rep.controller.retention_s)
+    assert math.isinf(rep.controller.interval_s)
+    assert rep.memory["retention_s"] is None
+    assert rep.memory["interval_s"] is None
+    assert not rep.pulse_exceeds_retention
+    json.dumps(rep.to_dict(), allow_nan=False)     # strict JSON holds
+
+
+# ----------------------------------------------------- benchmark plumbing
+
+def test_fig24_freq_rows_surface_verdict_and_warnings():
+    from benchmarks import fig24_tta_eta
+    rows = fig24_tta_eta._freq_rows(None, None, [500e6, 125e6])
+    tagged = [r for r in rows if isinstance(r, dict)]
+    assert [r["freq_hz"] for r in tagged[:2]] == [500e6, 125e6]
+    base_fast, base_slow = tagged[0]["row"], tagged[1]["row"]
+    assert "refresh_free=True" in base_fast
+    assert "refresh_free=False" in base_slow
+    # the hot point at 125 MHz can never hide -> one-line warning row
+    assert any(isinstance(r, str) and "/WARN" in r
+               and "retention" in r for r in rows)
+
+
+def test_bank_occupancy_hiding_row_carries_freq():
+    from benchmarks import bank_occupancy
+    rows: list = []
+    bank_occupancy._append_hiding(rows, freq_hz=250e6)
+    assert rows[0]["freq_hz"] == 250e6
+    assert "_warn" not in rows[0]
+    assert "f250MHz" in rows[0]["row"]
+    assert len(rows) == 2 and "WARN" in rows[1]    # 250 MHz can't hide
