@@ -16,6 +16,12 @@ operating point — pulse widths scale with 1/f against wall-clock
 retention deadlines, so the hiding rate degrades as the clock drops and
 a ``pulse_exceeds_retention`` warning row appears once a bank's pulse
 outlasts its retention interval.
+
+``run(granularity="row")`` (``--granularity row``) switches the per-arm
+rows to row-granular refresh pulses; independently, the
+``row_refresh`` row always compares the two granularities at the hot
+operating point (row stall must never exceed bank stall, refresh energy
+must match exactly).
 """
 from __future__ import annotations
 
@@ -36,14 +42,54 @@ def _arm(label: str, workload: sim.WorkloadSpec, **system) -> sim.Arm:
                    workload=workload, reversible=True, iters_to_target=None)
 
 
-def _hiding_row(freq_hz=None) -> dict:
+def _row_refresh_row(freq_hz=None, bank=None) -> dict:
+    """Row-granular vs bank-granular refresh at the hot operating point:
+    row granularity must never stall more than bank granularity and must
+    keep refresh energy bit-identical (placement moves time, not the
+    ∫occ·dt integral the energy charges).  ``bank`` reuses an already
+    simulated bank-granularity timeline report (``_append_hiding``
+    returns one) instead of re-running the pipeline."""
+    base = sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime")
+    if freq_hz is not None:
+        base = base.with_cost(sim.FixedClock(freq_hz=freq_hz))
+    if bank is None:
+        bank = sim.run(base)
+    row = sim.run(base.with_system(refresh_granularity="row"))
+    tag = "bank_occupancy/row_refresh/T100" + (
+        f"/f{row.freq_hz / 1e6:g}MHz" if freq_hz is not None else "")
+    return {
+        "row": (f"{tag},{row.latency_s*1e6:.1f},"
+                f"bank_refresh_stall_us={bank.refresh_stall_s*1e6:.2f};"
+                f"row_refresh_stall_us={row.refresh_stall_s*1e6:.2f};"
+                f"rows_refreshed={row.rows_refreshed};"
+                f"row_hidden_frac={row.row_hidden_frac:.3f};"
+                f"stall_le_bank="         # ≤ up to float rounding
+                f"{row.refresh_stall_s <= bank.refresh_stall_s * (1 + 1e-9) + 1e-18};"
+                f"refresh_j_equal="
+                f"{row.memory['refresh_j'] == bank.memory['refresh_j']};"
+                f"bank_flags_exceeds={bank.pulse_exceeds_retention};"
+                f"row_flags_exceeds={row.pulse_exceeds_retention}"),
+        "arm": "DuDNN+CAMEL",
+        "freq_hz": row.freq_hz,
+        "granularity": "row",
+        "refresh_stall_s": row.refresh_stall_s,
+        "rows_refreshed": row.rows_refreshed,
+        "config": row.config,
+    }
+
+
+def _hiding_row(freq_hz=None, granularity=None) -> tuple:
     """Refresh hiding at the hot operating point: the timeline model must
     cut refresh stall vs additive at (bit-)identical refresh energy —
     this row always runs both timings to compare.  ``freq_hz`` re-prices
     the op schedule at another clock (retention deadlines stay
-    wall-clock), so hiding degrades as the clock drops."""
+    wall-clock), so hiding degrades as the clock drops.  Returns
+    ``(row dict, timeline ArmReport)`` so callers can reuse the
+    simulation."""
     arm = sim.get_arm("DuDNN+CAMEL").with_system(
-        temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime")
+        temp_c=100.0, refresh_policy="selective", alloc_policy="lifetime",
+        refresh_granularity=granularity or "bank")
     if freq_hz is not None:
         arm = arm.with_cost(sim.FixedClock(freq_hz=freq_hz))
     add = sim.run(arm, timing="additive")
@@ -52,7 +98,7 @@ def _hiding_row(freq_hz=None) -> dict:
     rel = dj / add.memory["refresh_j"] if add.memory["refresh_j"] else 0.0
     tag = "bank_occupancy/refresh_hiding/T100" + (
         f"/f{tml.freq_hz / 1e6:g}MHz" if freq_hz is not None else "")
-    return {
+    return ({
         "row": (f"{tag},"
                 f"{tml.latency_s*1e6:.1f},"
                 f"additive_refresh_stall_us={add.refresh_stall_s*1e6:.2f};"
@@ -68,22 +114,25 @@ def _hiding_row(freq_hz=None) -> dict:
         "freq_hz": tml.freq_hz,
         "config": tml.config,
         "_warn": tml.pulse_exceeds_retention,
-    }
+    }, tml)
 
 
-def _append_hiding(rows: list, freq_hz=None) -> None:
+def _append_hiding(rows: list, freq_hz=None, granularity=None):
     """One hiding row (+ a warning line when a bank's pulse can never
-    hide inside its retention interval)."""
-    row = _hiding_row(freq_hz)
+    hide inside its retention interval).  Returns the timeline
+    ``ArmReport`` the row was built from."""
+    row, rep = _hiding_row(freq_hz, granularity)
     warn = row.pop("_warn")
     rows.append(row)
     if warn:
         rows.append(f"{row['row'].split(',', 1)[0]}/WARN,0,"
                     f"refresh pulse exceeds the retention interval on >=1 "
                     f"bank - refresh there can never hide")
+    return rep
 
 
-def run(timing=None, freqs=None) -> list:
+def run(timing=None, freqs=None, granularity=None) -> list:
+    gran = granularity or "bank"
     rows: list = []
     for label, nb, batch, cb, ck in CONFIGS:
         wl = sim.WorkloadSpec(n_blocks=nb, batch=batch, spatial=7,
@@ -93,6 +142,7 @@ def run(timing=None, freqs=None) -> list:
                 per_policy = {
                     pol: sim.run(_arm(label, wl, array=array, temp_c=temp,
                                       refresh_policy=pol,
+                                      refresh_granularity=gran,
                                       alloc_policy="lifetime"),
                                  timing=timing)
                     for pol in ("none", "selective", "always")}
@@ -147,14 +197,22 @@ def run(timing=None, freqs=None) -> list:
         "arm": "FR+SRAM",
         "config": fr.config,
     })
-    _append_hiding(rows)
+    # the hiding row's timeline report doubles as the bank-granularity
+    # reference for the row_refresh comparison (no re-simulation) —
+    # unless this whole run is itself row-granular
+    rep = _append_hiding(rows, granularity=granularity)
+    rows.append(_row_refresh_row(bank=rep if gran == "bank" else None))
     for f in (freqs or ()):
-        _append_hiding(rows, freq_hz=f)
+        rep = _append_hiding(rows, freq_hz=f, granularity=granularity)
+        rows.append(_row_refresh_row(
+            freq_hz=f, bank=rep if gran == "bank" else None))
     rows.append("bank_occupancy/claim,0,"
                 "paper=selective refresh skips refresh-free banks (Fig 23) "
                 "and beats always-refresh energy (Fig 24); timeline model "
                 "hides refresh in bank-idle windows; hiding is "
-                "frequency-dependent (--freq sweeps operating points)")
+                "frequency-dependent (--freq sweeps operating points) and "
+                "row-granular pulses (--granularity row) hide where a "
+                "whole-bank pulse cannot")
     return rows
 
 

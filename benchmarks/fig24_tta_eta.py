@@ -15,7 +15,11 @@ points: op time scales with 1/f while retention deadlines stay
 wall-clock, so the rows show the refresh hiding rate and the
 refresh-free verdict flipping across operating points; a bank whose
 pulse outlasts its retention interval gets a one-line
-``pulse_exceeds_retention`` warning row.
+``pulse_exceeds_retention`` warning row.  ``run(granularity="row")``
+(``--granularity row``) switches every simulated arm to row-granular
+refresh pulses: the hot/slow points hide refresh row by row (rows and
+hiding fraction surfaced per row record), refresh *energy* is unchanged,
+and only banks whose single-row pulse outlasts the interval still warn.
 """
 from __future__ import annotations
 
@@ -33,11 +37,16 @@ ARCHS = [
 ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL")
 
 
-def _freq_rows(timing, parallel, freqs) -> list:
+def _freq_rows(timing, parallel, freqs, granularity=None) -> list:
     """The operating-point sweep: DuDNN+CAMEL at 60 °C and 100 °C across
-    ``freqs``; one row per (point, frequency) plus warning rows."""
+    ``freqs``; one row per (point, frequency) plus warning rows.
+    ``granularity`` switches the refresh pulse unit (``--granularity
+    row`` emits per-wordline pulses — the hot/slow points hide refresh
+    row by row instead of flagging ``pulse_exceeds_retention``)."""
     freqs = list(freqs)            # consumed twice: sweep + row indexing
     base = sim.get_arm("DuDNN+CAMEL")
+    if granularity is not None:
+        base = base.with_system(refresh_granularity=granularity)
     points = [
         base,
         dataclasses.replace(
@@ -60,10 +69,15 @@ def _freq_rows(timing, parallel, freqs) -> list:
                         f"refresh_stall_us={rep.refresh_stall_s*1e6:.2f};"
                         f"refresh_hidden_j={rep.refresh_hidden_j:.3e};"
                         f"energy_j={rep.energy_j:.4e};"
+                        f"granularity={rep.memory['granularity']};"
+                        f"rows_refreshed={rep.rows_refreshed};"
                         f"pulse_exceeds_retention="
                         f"{rep.pulse_exceeds_retention}"),
                 "arm": rep.arm,
                 "freq_hz": rep.freq_hz,
+                "granularity": rep.memory["granularity"],
+                "refresh_stall_s": rep.refresh_stall_s,
+                "rows_refreshed": rep.rows_refreshed,
                 "config": rep.config,
             })
             if rep.pulse_exceeds_retention:
@@ -73,10 +87,13 @@ def _freq_rows(timing, parallel, freqs) -> list:
     return rows
 
 
-def run(timing=None, parallel=None, freqs=None) -> list:
+def run(timing=None, parallel=None, freqs=None, granularity=None) -> list:
     rows: list = []
     # one grid sweep: arms × archs, in deterministic order
     arms = [sim.get_arm(name) for name in ARMS]
+    if granularity is not None:
+        arms = [a.with_system(refresh_granularity=granularity)
+                for a in arms]
     workloads = [dict(n_blocks=nb, batch=48, spatial=7,
                       c_branch=cb, c_backbone=ck)
                  for _, nb, cb, ck in ARCHS]
@@ -105,7 +122,7 @@ def run(timing=None, parallel=None, freqs=None) -> list:
             f"ETAxCA={ca.eta_j / camel.eta_j:.2f};"
             f"refresh_free={camel.refresh_free}")
     if freqs:
-        rows += _freq_rows(timing, parallel, freqs)
+        rows += _freq_rows(timing, parallel, freqs, granularity)
     rows.append("fig24/claim,0,paper=DuDNN+CAMEL best TTA & >=2x ETA")
     return rows
 

@@ -9,18 +9,22 @@ fully resolved config (``repro.sim.ArmReport.config``), so each record is
 self-describing.  ``--list`` prints the registered suites.
 
 ``--timing additive|timeline`` selects the memory stall model,
-``--parallel N`` the ``sim.sweep`` process-pool width, and
+``--parallel N`` the ``sim.sweep`` process-pool width,
 ``--freq F1,F2,...`` an operating-point axis (Hz, e.g. ``2.5e8,5e8`` —
-each becomes a ``FixedClock`` cost model); all are forwarded to the
-suites that accept them (currently fig24 and bank_occupancy).  Rows from
-a frequency sweep carry a top-level ``freq_hz`` field in the ``--json``
-records, so sweep outputs stay machine-comparable across PRs.
+each becomes a ``FixedClock`` cost model), and ``--granularity bank|row``
+the refresh pulse unit (row-granular pulses interleave with compute at
+wordline boundaries); all are forwarded to the suites that accept them
+(currently fig24 and bank_occupancy).  Rows from a frequency sweep carry
+a top-level ``freq_hz`` field in the ``--json`` records — and the
+granularity-aware rows a ``granularity`` / ``refresh_stall_s`` pair — so
+sweep outputs stay machine-comparable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
                                             [--json out.json] [--list]
                                             [--timing timeline]
                                             [--parallel 4]
                                             [--freq 2.5e8,5e8]
+                                            [--granularity row]
 """
 from __future__ import annotations
 
@@ -105,6 +109,11 @@ def main() -> None:
                     help="comma-separated operating frequencies in Hz "
                          "(each a FixedClock point) for suites that sweep "
                          "them; records carry freq_hz")
+    ap.add_argument("--granularity", default=None,
+                    choices=["bank", "row"],
+                    help="refresh pulse unit for suites that sim arms "
+                         "(row = per-wordline pulses; default: the "
+                         "system default, bank)")
     args = ap.parse_args()
     freqs = ([float(f) for f in args.freq.split(",")]
              if args.freq else None)
@@ -139,7 +148,8 @@ def main() -> None:
             accepted = inspect.signature(SUITES[name]).parameters
             kwargs = {k: v for k, v in (("timing", args.timing),
                                         ("parallel", args.parallel),
-                                        ("freqs", freqs))
+                                        ("freqs", freqs),
+                                        ("granularity", args.granularity))
                       if v is not None and k in accepted}
             for row in SUITES[name](**kwargs):
                 emit(row)

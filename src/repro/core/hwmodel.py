@@ -63,7 +63,20 @@ class SystemConfig:
     # schedule instead of the scalar stored/needs_refresh arithmetic
     use_controller: bool = True
     refresh_policy: str = "selective"   # always | none | selective
+    # refresh pulse unit: "bank" (one pulse per bank per retention tick,
+    # the conventional discipline) or "row" (one pulse per occupied
+    # wordline — the paper controller's granularity; compute interleaves
+    # with refresh at row boundaries).  Refresh energy is granularity-
+    # invariant; only refresh stalls / hiding move.
+    refresh_granularity: str = "bank"   # bank | row
     alloc_policy: str = "pingpong"      # pingpong | first_fit | lifetime
+    # charge the on-chip tier's leakage power (EDRAMConfig.leakage_mw_per_kb
+    # or sram_leakage_mw_per_kb × the tier's capacity in kB) over each
+    # iteration's wall-clock latency.  Off by default — the golden-pinned
+    # seed numbers predate the leakage term; enabling it makes slow DVFS
+    # operating points pay for the time they stretch over, so the
+    # energy-optimal point becomes interior instead of the slowest clock.
+    charge_leakage: bool = False
     # bank count the controller splits ``onchip_bits`` into when
     # ``use_edram=False`` (the paper's 4×48KB activation SRAMs)
     sram_banks: int = 4

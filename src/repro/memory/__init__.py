@@ -17,15 +17,17 @@ pulse placement (``RefreshScheduler.place_pulses``).
 """
 from repro.memory.banks import BankGeometry, BankState, port_service_s
 from repro.memory.allocator import ALLOC_POLICIES, Allocator, Placement
-from repro.memory.refresh import (REFRESH_POLICIES, PulsePlacement,
-                                  RefreshDecision, RefreshScheduler)
+from repro.memory.refresh import (REFRESH_GRANULARITIES, REFRESH_POLICIES,
+                                  PulsePlacement, RefreshDecision,
+                                  RefreshScheduler)
 from repro.memory.trace import (BankReport, ControllerReport, ReplayCore,
                                 TraceEvent, build_report, merge_traces,
                                 replay, replay_core)
 
 __all__ = [
     "ALLOC_POLICIES", "Allocator", "BankGeometry", "BankReport", "BankState",
-    "ControllerReport", "Placement", "PulsePlacement", "REFRESH_POLICIES",
+    "ControllerReport", "Placement", "PulsePlacement",
+    "REFRESH_GRANULARITIES", "REFRESH_POLICIES",
     "RefreshDecision", "RefreshScheduler", "ReplayCore", "TraceEvent",
     "build_report", "merge_traces", "port_service_s", "replay",
     "replay_core",

@@ -15,10 +15,18 @@ import math
 
 @dataclasses.dataclass(frozen=True)
 class BankGeometry:
-    """Word/bank shape derived from an ``EDRAMConfig``."""
+    """Word/bank shape derived from an ``EDRAMConfig``.
+
+    ``rows_per_bank`` is the wordline count — the silicon refresh
+    granularity: one refresh pulse senses and restores one row
+    (``words_per_row`` words).  ``rows_per_bank=0`` (the default for
+    hand-built geometries) means "one row spans the whole bank", which
+    makes a row pulse degenerate to the bank-granular pulse.
+    """
     word_bits: int
     words_per_bank: int
     n_banks: int
+    rows_per_bank: int = 0
 
     @classmethod
     def from_edram(cls, cfg) -> "BankGeometry":
@@ -26,11 +34,22 @@ class BankGeometry:
         # edram.capacity_bits); the word count per bank follows from the
         # 58-bit BFP word size.  EDRAMConfig.words_per_bank is the paper's
         # *row* count (a row holds several words) — it sets refresh
-        # granularity in silicon, not storage capacity, so it does not
-        # enter the geometry here.
+        # granularity in silicon, not storage capacity, so it enters the
+        # geometry as rows_per_bank, not as capacity.
         words = int(cfg.bank_kb * 1024 * 8 // cfg.word_bits)
         return cls(word_bits=cfg.word_bits, words_per_bank=words,
-                   n_banks=cfg.n_banks)
+                   n_banks=cfg.n_banks, rows_per_bank=cfg.words_per_bank)
+
+    @property
+    def words_per_row(self) -> int:
+        """Words one wordline holds — the row-refresh transfer unit."""
+        if self.rows_per_bank <= 0:
+            return self.words_per_bank
+        return max(1, math.ceil(self.words_per_bank / self.rows_per_bank))
+
+    def rows_for(self, words: int) -> int:
+        """Rows needed to hold ``words`` contiguously (ceil)."""
+        return max(0, math.ceil(words / self.words_per_row))
 
     @property
     def bank_bits(self) -> int:
@@ -148,6 +167,28 @@ class BankState:
             if t + need_s > hi:
                 return None
         return t if t + need_s <= hi else None
+
+    def idle_gaps(self, lo: float, hi: float) -> list[tuple[float, float]]:
+        """The maximal port-idle spans inside ``[lo, hi]``, in time order.
+        This is the row-granular refresh scheduler's placement query: it
+        packs one tick's row pulses into these gaps front-to-back, so the
+        pulses can never overlap each other or a busy interval."""
+        gaps: list[tuple[float, float]] = []
+        if hi <= lo:
+            return gaps
+        t = lo
+        for s, e in self._busy:
+            if e <= t:
+                continue
+            if s >= hi:
+                break
+            if s > t:
+                gaps.append((t, s))
+            t = max(t, e)
+            if t >= hi:
+                return gaps
+        gaps.append((t, hi))
+        return gaps
 
     @property
     def free_words(self) -> int:

@@ -14,6 +14,12 @@ Policies:
     die young are skipped.  Energy falls between ``none`` and ``always``
     and no over-retention bank is ever left unrefreshed.
 
+Orthogonal to the policy, the *granularity* sets the pulse unit: the
+conventional one-pulse-per-bank discipline (``"bank"``), or the paper
+controller's row-granular refresh (``"row"`` — one pulse per occupied
+wordline, so compute interleaves with refresh at row boundaries and a
+near-full bank can still hide its refresh row by row).
+
 The interval is temperature-adaptive — ``retention_s(temp_c) / guard`` —
 so the same schedule tightens automatically as the die heats up (Fig 22).
 Refresh energy integrates each refreshed bank's occupancy over time
@@ -25,12 +31,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 from repro.core import edram as ed
 from repro.memory.banks import BankState, port_service_s
 
 REFRESH_POLICIES = ("always", "none", "selective")
+
+# pulse granularity: "bank" refreshes a bank's whole occupancy in one
+# pulse per retention tick; "row" emits one pulse per occupied wordline
+# (words_per_row words each), placed independently — compute interleaves
+# with refresh at row boundaries, as in the paper's controller
+REFRESH_GRANULARITIES = ("bank", "row")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,12 +61,17 @@ class RefreshDecision:
     refresh_hidden_j: float = 0.0
     # the can-never-hide case (ROADMAP): this bank's pulse needs more
     # continuous port time than one retention interval provides, so no
-    # idle window can ever fit it — every pulse stalls, by construction
+    # idle window can ever fit it — every pulse stalls, by construction.
+    # Granularity-aware: under row granularity the pulse unit is one
+    # row's words, so a near-full bank whose *row* pulse fits the
+    # interval is not flagged even when its whole-bank pulse would be
     pulse_exceeds_retention: bool = False
+    # row-granular pulses emitted for this bank (0 under bank
+    # granularity); hidden_count counts the same unit
+    rows_refreshed: int = 0
 
 
-@dataclasses.dataclass(frozen=True)
-class PulsePlacement:
+class PulsePlacement(NamedTuple):
     """One refresh pulse placed on the event-interleaved timeline.
 
     ``deadline_s`` is the end of the pulse's retention interval; the
@@ -62,6 +79,15 @@ class PulsePlacement:
     window before that deadline.  ``hidden`` pulses cost energy but no
     time; a pulse with no idle window preempts the ports at its deadline
     and charges ``stall_s`` seconds of serialization.
+
+    Under row granularity one placement is emitted per *hidden* row per
+    tick: ``row`` is the 0-based wordline index and ``words`` the words
+    that row's pulse moves (``words_per_row``, except a partial last
+    row).  Rows refresh strictly in row order; once a row finds no gap,
+    every later row of that tick preempts with it — that run is emitted
+    as a single placement with ``rows`` > 1 whose ``words``/``stall_s``
+    are the run's totals.  Under bank granularity ``row`` stays 0,
+    ``rows`` 1, and ``words`` is the bank's whole ``peak_words``.
     """
     bank: int
     index: int                 # 1-based retention tick
@@ -69,6 +95,9 @@ class PulsePlacement:
     start_s: float
     hidden: bool
     stall_s: float
+    row: int = 0
+    words: int = 0
+    rows: int = 1              # pulse multiplicity (a preempting run)
 
 
 class RefreshScheduler:
@@ -77,15 +106,27 @@ class RefreshScheduler:
     ``retention_s`` overrides the temperature-derived retention floor —
     pass ``math.inf`` to model a static technology (the SRAM baseline's
     controller replay) that never needs refresh.
+
+    ``granularity`` selects the pulse unit (``REFRESH_GRANULARITIES``):
+    ``"bank"`` (default) refreshes a bank's whole occupancy in one pulse
+    per retention tick; ``"row"`` emits an independent pulse per occupied
+    wordline, so refresh interleaves with compute at row boundaries.
+    Refresh *energy* is granularity-invariant — it integrates occupancy
+    over time (∫occ·dt), which placement does not touch.
     """
 
     def __init__(self, policy: str, temp_c: float, guard: float = 1.0,
                  interval_s: float | None = None,
-                 retention_s: float | None = None):
+                 retention_s: float | None = None,
+                 granularity: str = "bank"):
         if policy not in REFRESH_POLICIES:
             raise ValueError(f"unknown refresh policy {policy!r}; "
                              f"choose from {REFRESH_POLICIES}")
+        if granularity not in REFRESH_GRANULARITIES:
+            raise ValueError(f"unknown refresh granularity {granularity!r};"
+                             f" choose from {REFRESH_GRANULARITIES}")
         self.policy = policy
+        self.granularity = granularity
         self.temp_c = temp_c
         self.retention_s = (retention_s if retention_s is not None
                             else ed.retention_s(temp_c))
@@ -112,37 +153,98 @@ class RefreshScheduler:
         return held_data and (self.policy == "always"
                               or (self.policy == "selective" and needs))
 
+    def pulse_chunks(self, bank: BankState) -> list[int]:
+        """Word counts of the pulses one retention tick emits for
+        ``bank``: ``[peak_words]`` under bank granularity; one entry per
+        occupied wordline (``words_per_row`` each, partial last row)
+        under row granularity."""
+        if bank.peak_words <= 0:
+            return []
+        if self.granularity == "bank":
+            return [bank.peak_words]
+        wpr = bank.geometry.words_per_row
+        rows = bank.geometry.rows_for(bank.peak_words)
+        chunks = [wpr] * rows
+        chunks[-1] = bank.peak_words - wpr * (rows - 1)
+        return chunks
+
     def place_pulses(self, bank: BankState, duration_s: float,
                      freq_hz: float) -> list[PulsePlacement]:
         """Deadline-driven pulse placement for the timeline model.
 
-        One pulse per retention tick (``interval_s``) over ``duration_s``
-        seconds of timeline.  Each pulse needs the bank's ports for
-        ``port_service_s(peak_words)`` seconds (read the droop + restore
-        through the same word line); the scheduler looks for a bank-idle
-        window of that length inside the pulse's own retention interval
-        ``[(k-1)·I, min(k·I, duration_s)]``.  A window found ⇒ the pulse
-        is *hidden* under compute (energy charged, zero stall); no window
-        ⇒ the pulse preempts at its deadline and charges its full port
-        time as ``stall_s``.
+        Bank granularity: one pulse per retention tick (``interval_s``)
+        over ``duration_s`` seconds of timeline.  Each pulse needs the
+        bank's ports for ``port_service_s(peak_words)`` seconds (read the
+        droop + restore through the same word line); the scheduler looks
+        for a bank-idle window of that length inside the pulse's own
+        retention interval ``[(k-1)·I, min(k·I, duration_s)]``.  A window
+        found ⇒ the pulse is *hidden* under compute (energy charged, zero
+        stall); no window ⇒ the pulse preempts at its deadline and
+        charges its full port time as ``stall_s``.
+
+        Row granularity: each tick emits one pulse per occupied wordline
+        (``port_service_s(words_per_row)`` each), packed front-to-back in
+        row order into the tick's idle gaps (``BankState.idle_gaps``) —
+        compute interleaves with refresh at row boundaries, placed pulses
+        never overlap each other or a busy interval, and only the rows
+        that find no gap preempt at the deadline and stall.  The row
+        counter never skips ahead: once a row cannot be placed, the rest
+        of the tick's rows preempt with it, returned as one aggregated
+        :class:`PulsePlacement` (``rows`` = the run length).
 
         Pure query — mutates nothing; feed the result to :meth:`account`
         via ``placements`` to commit counters and energy.
         """
         if duration_s <= 0 or not math.isfinite(self.interval_s):
             return []
-        pulse_s = port_service_s(bank.peak_words, freq_hz)
+        chunks = self.pulse_chunks(bank)
+        widths = [port_service_s(w, freq_hz) for w in chunks]
         ticks = math.ceil(duration_s / self.interval_s)
-        out = []
+        out: list[PulsePlacement] = []
         for k in range(1, ticks + 1):
             lo = (k - 1) * self.interval_s
             deadline = min(k * self.interval_s, duration_s)
-            start = bank.idle_window(lo, deadline, pulse_s)
-            hidden = start is not None
-            out.append(PulsePlacement(
-                bank=bank.index, index=k, deadline_s=deadline,
-                start_s=start if hidden else deadline, hidden=hidden,
-                stall_s=0.0 if hidden else pulse_s))
+            if self.granularity == "bank":
+                for words, pulse_s in zip(chunks, widths):
+                    start = bank.idle_window(lo, deadline, pulse_s)
+                    hidden = start is not None
+                    out.append(PulsePlacement(
+                        bank=bank.index, index=k, deadline_s=deadline,
+                        start_s=start if hidden else deadline,
+                        hidden=hidden,
+                        stall_s=0.0 if hidden else pulse_s,
+                        row=0, words=words))
+                continue
+            # row granularity: pack the tick's row pulses greedily into
+            # the idle gaps, in row order (the controller's row counter)
+            gaps = bank.idle_gaps(lo, deadline)
+            gi, cursor = 0, (gaps[0][0] if gaps else deadline)
+            r = 0
+            while r < len(chunks):
+                pulse_s = widths[r]
+                start = None
+                while gi < len(gaps):
+                    if gaps[gi][1] - cursor >= pulse_s:
+                        start = cursor
+                        cursor += pulse_s
+                        break
+                    gi += 1
+                    if gi < len(gaps):
+                        cursor = gaps[gi][0]
+                if start is not None:
+                    out.append(PulsePlacement(
+                        bank=bank.index, index=k, deadline_s=deadline,
+                        start_s=start, hidden=True, stall_s=0.0,
+                        row=r, words=chunks[r]))
+                    r += 1
+                    continue
+                # gaps exhausted — this row and every later one preempt
+                out.append(PulsePlacement(
+                    bank=bank.index, index=k, deadline_s=deadline,
+                    start_s=deadline, hidden=False,
+                    stall_s=sum(widths[r:]), row=r,
+                    words=sum(chunks[r:]), rows=len(chunks) - r))
+                break
         return out
 
     def account(self, banks: Sequence[BankState], duration_s: float,
@@ -175,12 +277,15 @@ class RefreshScheduler:
             stalls in **s**).  Refresh energy integrates occupancy over
             time (∫occ·dt / interval × pJ/bit) and is split into the
             sense/read and restore/write-back phases;
-            ``RefreshDecision.refresh_j`` stays the total.  A refreshed
-            bank whose pulse width ``port_service_s(peak_words)`` exceeds
-            the retention interval is flagged
-            ``pulse_exceeds_retention`` — it can never hide (note the
-            pulse width scales with 1/``freq_hz`` while the interval is
-            wall-clock, so clocking down can trip this).
+            ``RefreshDecision.refresh_j`` stays the total — and is
+            granularity-invariant, since pulse placement never enters the
+            integral.  A refreshed bank whose pulse unit (the whole
+            occupancy under bank granularity, one row's words under row
+            granularity) needs more port time than the retention interval
+            provides is flagged ``pulse_exceeds_retention`` — it can
+            never hide (note the pulse width scales with 1/``freq_hz``
+            while the interval is wall-clock, so clocking down can trip
+            this, and moving to row granularity can clear it).
 
         Mutates each bank's ``refresh_count`` / ``refresh_bits`` /
         ``refresh_hidden`` / ``stall_s`` counters.
@@ -192,10 +297,11 @@ class RefreshScheduler:
             needs = (b.max_resident_s * lifetime_scale) >= self.retention_s
             refreshed = ticks > 0 and self.would_refresh(b, lifetime_scale)
             read_j = restore_j = hidden_j = 0.0
-            count = hidden = 0
+            count = hidden = rows = 0
             stall = 0.0
+            pulse_words = max(self.pulse_chunks(b), default=0)
             exceeds = (refreshed and math.isfinite(self.interval_s)
-                       and port_service_s(b.peak_words, freq_hz)
+                       and port_service_s(pulse_words, freq_hz)
                        > self.interval_s)
             if refreshed:
                 # ∫occ·dt / interval — fractional intervals included, so a
@@ -206,16 +312,29 @@ class RefreshScheduler:
                 pulses = None if placements is None \
                     else placements.get(b.index, [])
                 if pulses is None:
-                    # additive model: each pulse serializes the ports for
-                    # the bank's resident words
-                    count = ticks
-                    stall = count * port_service_s(b.peak_words, freq_hz)
+                    # additive model: each retention tick serializes the
+                    # ports for the bank's full resident words — the row
+                    # pulses of one tick sum to the same port time, so
+                    # the additive total is granularity-invariant.  The
+                    # pulse count matches the timeline model's unit
+                    # (ticks under bank granularity, individual row
+                    # pulses under row granularity) so the two timings
+                    # stay cross-comparable
+                    stall = ticks * port_service_s(b.peak_words, freq_hz)
+                    if self.granularity == "row":
+                        rows = count = ticks * len(self.pulse_chunks(b))
+                    else:
+                        count = ticks
                 else:
-                    count = len(pulses)
+                    # p.rows is the pulse multiplicity (1 except for an
+                    # aggregated preempting run of row pulses)
+                    count = sum(p.rows for p in pulses)
                     stall = sum(p.stall_s for p in pulses)
-                    hidden = sum(1 for p in pulses if p.hidden)
+                    hidden = sum(p.rows for p in pulses if p.hidden)
                     if count:
                         hidden_j = (read_j + restore_j) * hidden / count
+                    if self.granularity == "row":
+                        rows = count
                 b.refresh_count += count
                 b.refresh_bits += bit_intervals
                 b.refresh_hidden += hidden
@@ -228,5 +347,6 @@ class RefreshScheduler:
                                        refresh_restore_j=restore_j,
                                        hidden_count=hidden,
                                        refresh_hidden_j=hidden_j,
-                                       pulse_exceeds_retention=exceeds))
+                                       pulse_exceeds_retention=exceeds,
+                                       rows_refreshed=rows))
         return out

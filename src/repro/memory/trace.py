@@ -64,6 +64,8 @@ class BankReport:
     # this bank's refresh pulse is longer than its retention interval —
     # it can never hide under compute (see RefreshScheduler.account)
     pulse_exceeds_retention: bool = False
+    # row-granular pulses emitted for this bank (0 under bank granularity)
+    rows_refreshed: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +105,14 @@ class ControllerReport:
     refresh_stall_s: float = 0.0   # unhidden-refresh share of stall_s
     refresh_hidden_j: float = 0.0  # refresh energy hidden under compute
     timeline: Optional[dict] = None  # timeline-model summary (JSON-safe)
+    # pulse granularity the scheduler ran with ("bank" | "row"); under
+    # "row", rows_refreshed counts the row pulses emitted and
+    # row_hidden_frac the share of them placed into idle gaps (both stay
+    # 0 under bank granularity).  Refresh *energy* is granularity-
+    # invariant — only refresh_stall_s / refresh_hidden_j move.
+    granularity: str = "bank"
+    rows_refreshed: int = 0
+    row_hidden_frac: float = 0.0
 
     @property
     def energy(self) -> ed.MemoryEnergy:
@@ -161,7 +171,8 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 freq_hz: float = 500e6,
                 sample_scale: float = 1.0,
                 refresh_guard: float = 1.0,
-                retention_s: Optional[float] = None) -> ReplayCore:
+                retention_s: Optional[float] = None,
+                granularity: str = "bank") -> ReplayCore:
     """Walk ``events`` through allocator placement and traffic-energy
     accounting; returns the :class:`ReplayCore` a stall model finishes.
 
@@ -171,11 +182,14 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     be streamed sample-by-sample — and their residency counts unscaled
     against retention.  ``retention_s`` overrides the
     temperature-derived retention floor — pass ``math.inf`` to replay an
-    SRAM tier that never refreshes.
+    SRAM tier that never refreshes.  ``granularity`` sets the refresh
+    pulse unit (``"bank"`` | ``"row"`` — see
+    :class:`~repro.memory.refresh.RefreshScheduler`).
     """
     geom = BankGeometry.from_edram(cfg)
     sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
-                             retention_s=retention_s)
+                             retention_s=retention_s,
+                             granularity=granularity)
     alloc = Allocator(geom, policy=alloc_policy,
                       retention_s=sched.retention_s)
 
@@ -299,6 +313,9 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
     refresh_restore_j = sum(d.refresh_restore_j for d in decisions)
     refresh_stall = sum(d.stall_s for d in decisions)
     refresh_hidden_j = sum(d.refresh_hidden_j for d in decisions)
+    rows_refreshed = sum(d.rows_refreshed for d in decisions)
+    rows_hidden = (sum(d.hidden_count for d in decisions)
+                   if core.sched.granularity == "row" else 0)
 
     banks = tuple(
         BankReport(
@@ -310,7 +327,8 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
             max_resident_lifetime_s=b.max_resident_s,
             needs_refresh=d.needs_refresh, refreshed=d.refreshed,
             busy_s=b.busy_s, refresh_hidden=d.hidden_count,
-            pulse_exceeds_retention=d.pulse_exceeds_retention)
+            pulse_exceeds_retention=d.pulse_exceeds_retention,
+            rows_refreshed=d.rows_refreshed)
         for b, d in zip(core.alloc.banks, decisions))
 
     return ControllerReport(
@@ -328,7 +346,11 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
         interval_s=core.sched.interval_s,
         timing=timing, conflict_stall_s=conflict_stall_s,
         refresh_stall_s=refresh_stall, refresh_hidden_j=refresh_hidden_j,
-        timeline=timeline)
+        timeline=timeline,
+        granularity=core.sched.granularity,
+        rows_refreshed=rows_refreshed,
+        row_hidden_frac=(rows_hidden / rows_refreshed
+                         if rows_refreshed else 0.0))
 
 
 def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
@@ -339,7 +361,8 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
            sample_scale: float = 1.0,
            op_durations: Optional[dict] = None,
            refresh_guard: float = 1.0,
-           retention_s: Optional[float] = None) -> ControllerReport:
+           retention_s: Optional[float] = None,
+           granularity: str = "bank") -> ControllerReport:
     """Replay ``events`` through the bank-level controller with the
     **additive** stall model (the cross-validation baseline; the
     closed-loop model lives in ``repro.sim.timeline``).
@@ -363,6 +386,11 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         retention_s: overrides the temperature-derived retention floor —
             pass ``math.inf`` to replay an SRAM tier that never
             refreshes.
+        granularity: refresh pulse unit (``"bank"`` | ``"row"``).  The
+            additive stall total is granularity-invariant (one tick's
+            row pulses serialize to the same port time as the bank
+            pulse); only the ``pulse_exceeds_retention`` flag and the
+            row counters move.
 
     Returns:
         A :class:`ControllerReport` (energies in J, stalls in s) with
@@ -372,7 +400,8 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         events, cfg, temp_c=temp_c, duration_s=duration_s,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
-        refresh_guard=refresh_guard, retention_s=retention_s)
+        refresh_guard=refresh_guard, retention_s=retention_s,
+        granularity=granularity)
 
     # bank-conflict stalls: each bank moves one word/cycle/port; an op is
     # stalled by its most-contended bank beyond its own compute time

@@ -77,6 +77,14 @@ class Arm:
     pre-cost-model pipeline); a :class:`~repro.sim.cost.DVFSState`
     evaluates the same arm at a different frequency/voltage point while
     retention deadlines stay wall-clock.
+
+    The memory policies ride on the ``system``
+    (:class:`~repro.core.hwmodel.SystemConfig`): ``refresh_policy``
+    (always/none/selective), ``refresh_granularity`` ("bank" pulses one
+    whole bank per retention tick; "row" pulses each occupied wordline
+    independently, the paper controller's discipline), and
+    ``alloc_policy`` — e.g.
+    ``arm.with_system(refresh_granularity="row")``.
     """
     name: str
     system: hw.SystemConfig = hw.SystemConfig()

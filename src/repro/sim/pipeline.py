@@ -182,7 +182,8 @@ def stage_memory(arm: Arm, ctx: SimContext) -> None:
         ctx.events, mem_cfg, temp_c=cfg.temp_c, duration_s=ctx.duration_s,
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
-        op_durations=ctx.op_durations, retention_s=retention)
+        op_durations=ctx.op_durations, retention_s=retention,
+        granularity=cfg.refresh_granularity)
 
 
 def _buffered_partition(events) -> tuple[float, list]:
@@ -278,7 +279,16 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
 
     latency_s = ctx.duration_s + stall_s + (
         offchip_bits / cfg.offchip_bw_bps if offchip_bits else 0.0)
-    energy_j = compute_j + memory_j
+    # leakage burns on the whole on-chip tier for the iteration's
+    # wall-clock duration — the term that stops slow DVFS points from
+    # looking free on energy (opt-in: see SystemConfig.charge_leakage)
+    leakage_j = 0.0
+    if cfg.charge_leakage:
+        mw_per_kb = (cfg.edram.leakage_mw_per_kb if cfg.use_edram
+                     else cfg.edram.sram_leakage_mw_per_kb)
+        leakage_j = mw_per_kb * 1e-3 * (cfg.onchip_bits / 8.0 / 1024.0) \
+            * latency_s
+    energy_j = compute_j + memory_j + leakage_j
     rel_err = (abs(memory_j - scalar_mem.total_j) / scalar_mem.total_j
                if scalar_mem.total_j > 0 else 0.0)
     iters = arm.iters_to_target
@@ -302,6 +312,9 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
         timing=ctrl.timing if ctrl is not None else "scalar",
         refresh_stall_s=ctrl.refresh_stall_s if ctrl is not None else 0.0,
         refresh_hidden_j=ctrl.refresh_hidden_j if ctrl is not None else 0.0,
+        leakage_j=leakage_j,
+        rows_refreshed=ctrl.rows_refreshed if ctrl is not None else 0,
+        row_hidden_frac=ctrl.row_hidden_frac if ctrl is not None else 0.0,
         freq_hz=ctx.freq_hz or cfg.freq_hz,
         pulse_exceeds_retention=(ctrl.pulse_exceeds_retention
                                  if ctrl is not None else False),
@@ -337,6 +350,9 @@ def _memory_dict(ctrl) -> dict:
         "mode": "controller",
         "timing": ctrl.timing,
         "refresh_policy": ctrl.refresh_policy,
+        "granularity": ctrl.granularity,
+        "rows_refreshed": ctrl.rows_refreshed,
+        "row_hidden_frac": ctrl.row_hidden_frac,
         "alloc_policy": ctrl.alloc_policy,
         "temp_c": ctrl.temp_c,
         "duration_s": ctrl.duration_s,

@@ -44,6 +44,14 @@ class ArmReport:
     # hidden ones is refresh_hidden_j (J) — charged, but costing no time
     refresh_stall_s: float = 0.0
     refresh_hidden_j: float = 0.0
+    # on-chip tier leakage charged over the iteration's wall-clock
+    # latency (J); 0.0 unless SystemConfig.charge_leakage is set
+    leakage_j: float = 0.0
+    # row-granular refresh (SystemConfig.refresh_granularity="row"):
+    # row pulses emitted and the share of them hidden in idle gaps;
+    # both stay 0 under the default bank granularity
+    rows_refreshed: int = 0
+    row_hidden_frac: float = 0.0
     # the resolved operating point's clock (Hz) — the arm's cost model
     # decides it (FixedClock at SystemConfig.freq_hz by default); 0.0 on
     # records written before the cost-model API
@@ -67,6 +75,7 @@ class ArmReport:
                 "max_lifetime_s", "refresh_free", "peak_live_bits",
                 "offchip_bits", "iters_to_target", "tta_s", "eta_j",
                 "timing", "refresh_stall_s", "refresh_hidden_j",
+                "leakage_j", "rows_refreshed", "row_hidden_frac",
                 "freq_hz", "pulse_exceeds_retention")
 
     def to_dict(self) -> dict:

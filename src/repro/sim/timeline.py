@@ -86,7 +86,8 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
                     duration_s: float, refresh_policy: str = "selective",
                     alloc_policy: str = "pingpong", freq_hz: float = 500e6,
                     sample_scale: float = 1.0, refresh_guard: float = 1.0,
-                    retention_s=None) -> mtr.ControllerReport:
+                    retention_s=None,
+                    granularity: str = "bank") -> mtr.ControllerReport:
     """Replay ``events`` with the closed-loop timeline model.
 
     Same contract as :func:`repro.memory.trace.replay` (energies in J,
@@ -95,13 +96,18 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
     returned report has ``timing="timeline"``, the
     ``conflict_stall_s``/``refresh_stall_s`` split, ``refresh_hidden_j``,
     and a JSON-safe ``timeline`` summary (makespan, pulse placement
-    counts, per-bank port-busy time).
+    counts, per-bank port-busy time).  ``granularity="row"`` switches the
+    pulse unit to one occupied wordline — each tick's row pulses pack
+    independently into the bank's idle gaps, so a near-full bank whose
+    whole-bank pulse could never hide still hides refresh row by row
+    (refresh energy is granularity-invariant; only stalls move).
     """
     core = mtr.replay_core(
         events, cfg, temp_c=temp_c, duration_s=duration_s,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
-        refresh_guard=refresh_guard, retention_s=retention_s)
+        refresh_guard=refresh_guard, retention_s=retention_s,
+        granularity=granularity)
 
     makespan = closed_loop_walk(core, op_schedule)
     makespan = max(makespan, duration_s)
@@ -118,14 +124,18 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
         placements=placements)
 
     pulses = [p for ps in placements.values() for p in ps]
-    hidden = sum(1 for p in pulses if p.hidden)
+    # p.rows is the pulse multiplicity (an aggregated preempting run of
+    # row pulses counts each of its rows)
+    n_pulses = sum(p.rows for p in pulses)
+    hidden = sum(p.rows for p in pulses if p.hidden)
     summary = {
         "makespan_s": makespan,
         "schedule_s": duration_s,
         "conflict_stall_s": conflict_stall_s,
         "refresh_stall_s": sum(d.stall_s for d in decisions),
-        "pulses": len(pulses),
+        "pulses": n_pulses,
         "pulses_hidden": hidden,
+        "granularity": granularity,
         "port_busy_s": [b.busy_s for b in core.alloc.banks],
         "ops": sum(1 for _, s, e in op_schedule if e > s),
     }
@@ -147,7 +157,7 @@ def stage_timeline(arm: Arm, ctx: SimContext) -> None:
         temp_c=cfg.temp_c, duration_s=ctx.duration_s,
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
-        retention_s=retention)
+        retention_s=retention, granularity=cfg.refresh_granularity)
 
 
 TIMELINE_PIPELINE = DEFAULT_PIPELINE.with_stage("memory", stage_timeline)

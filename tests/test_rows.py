@@ -1,0 +1,330 @@
+"""Row-granular refresh pulses (repro.memory rows) and the cross-model
+invariants of the memory–timeline–cost stack: row-granular refresh stall
+never exceeds bank-granular, refresh energy is granularity-invariant to
+machine precision, ``pulse_exceeds_retention`` clears once a single
+row's pulse fits the retention interval, the leakage-energy term makes
+the energy-optimal DVFS point interior, and the memory-bound (non-linear)
+``OperatingPoint.op_seconds`` path."""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro import sim
+from repro.core import edram as ed
+from repro.core.schedule import OpWork, TraceEvent
+from repro.memory import BankGeometry, BankState, RefreshScheduler
+from repro.sim.cost import DVFSState, FixedClock, OperatingPoint, op_timer
+from repro.sim.timeline import replay_timeline
+
+WORD = ed.EDRAMConfig().word_bits
+
+
+def _le(row_stall, bank_stall):
+    """row ≤ bank up to float rounding: a fully-preempting tick's row
+    stall is a sum of per-row divisions vs one whole-bank division."""
+    return row_stall <= bank_stall * (1 + 1e-9) + 1e-18
+
+
+# ------------------------------------------------------------ row geometry
+
+def test_geometry_derives_rows_from_edram_config():
+    cfg = ed.EDRAMConfig()
+    geom = BankGeometry.from_edram(cfg)
+    # EDRAMConfig.words_per_bank is the paper's wordline count per bank
+    assert geom.rows_per_bank == cfg.words_per_bank == 1024
+    assert geom.words_per_row == math.ceil(geom.words_per_bank / 1024)
+    assert geom.words_per_row >= 1
+    assert geom.rows_for(0) == 0
+    assert geom.rows_for(1) == 1
+    assert geom.rows_for(geom.words_per_bank) <= geom.rows_per_bank + 1
+
+
+def test_geometry_without_rows_degenerates_to_bank():
+    geom = BankGeometry(word_bits=58, words_per_bank=100, n_banks=1)
+    assert geom.rows_per_bank == 0
+    assert geom.words_per_row == 100      # one row spans the bank
+    assert geom.rows_for(37) == 1
+
+
+def test_scheduler_rejects_unknown_granularity():
+    with pytest.raises(ValueError, match="unknown refresh granularity"):
+        RefreshScheduler("always", temp_c=60.0, granularity="wordline")
+
+
+# -------------------------------------------------- row pulse placement
+
+def _row_bank(rows_per_bank=10, words_per_bank=100):
+    return BankState(0, BankGeometry(word_bits=58,
+                                     words_per_bank=words_per_bank,
+                                     n_banks=1,
+                                     rows_per_bank=rows_per_bank))
+
+
+def test_row_pulses_pack_into_idle_gaps():
+    """50 peak words over 10-word rows = 5 row pulses of 0.1 s each at
+    100 Hz; a busy span [0, 2) in a 2 s interval forces tick-1 stalls
+    while tick 2 hides all rows back-to-back."""
+    b = _row_bank()
+    b.peak_words = 50
+    b.occ_bit_s = 1.0
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=2.0,
+                             granularity="row")
+    b.occupy_port(0.0, 2.0)
+    pulses = sched.place_pulses(b, duration_s=4.0, freq_hz=100.0)
+    assert sum(p.rows for p in pulses) == 2 * 5      # ticks × rows
+    tick1 = [p for p in pulses if p.index == 1]
+    tick2 = [p for p in pulses if p.index == 2]
+    # tick 1 has no idle gap: its 5 rows preempt as one aggregated run
+    (run,) = tick1
+    assert not run.hidden and run.rows == 5 and run.words == 50
+    assert run.stall_s == pytest.approx(0.5)
+    assert run.start_s == run.deadline_s == pytest.approx(2.0)
+    assert all(p.hidden and p.stall_s == 0.0 and p.rows == 1
+               for p in tick2)
+    # hidden pulses pack back-to-back from the start of the idle gap,
+    # never overlapping each other or the busy span
+    starts = sorted(p.start_s for p in tick2)
+    assert starts[0] == pytest.approx(2.0)
+    for a, nxt in zip(starts, starts[1:]):
+        assert nxt == pytest.approx(a + 0.1)
+    assert all(p.start_s + 0.1 <= 4.0 + 1e-12 for p in tick2)
+    assert {p.row for p in tick2} == set(range(5))
+
+
+def test_partial_last_row_pulse_is_shorter():
+    b = _row_bank()
+    b.peak_words = 23                                # 2 full rows + 3 words
+    b.occ_bit_s = 1.0
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=2.0,
+                             granularity="row")
+    pulses = sched.place_pulses(b, duration_s=2.0, freq_hz=100.0)
+    assert [p.words for p in pulses] == [10, 10, 3]
+    assert sum(p.words for p in pulses) == b.peak_words
+
+
+def test_row_pulses_hide_where_one_bank_pulse_cannot():
+    """The tentpole case: the bank-granular pulse is wider than every
+    idle gap, but the per-row pulses thread through them."""
+    b = _row_bank()
+    b.peak_words = 50                    # bank pulse 0.5 s; row pulse 0.1 s
+    b.occ_bit_s = 1.0
+    # comb of busy spans leaving 0.15 s gaps — never 0.5 s
+    for k in range(8):
+        b.occupy_port(k * 0.25, k * 0.25 + 0.10)
+    bank_sched = RefreshScheduler("always", temp_c=60.0, interval_s=2.0)
+    row_sched = RefreshScheduler("always", temp_c=60.0, interval_s=2.0,
+                                 granularity="row")
+    bank_pulses = bank_sched.place_pulses(b, duration_s=2.0, freq_hz=100.0)
+    row_pulses = row_sched.place_pulses(b, duration_s=2.0, freq_hz=100.0)
+    assert [p.hidden for p in bank_pulses] == [False]
+    assert all(p.hidden for p in row_pulses)
+    assert sum(p.stall_s for p in row_pulses) < sum(
+        p.stall_s for p in bank_pulses)
+
+
+# ------------------------------------- fig24 grid: row ≤ bank, energy ==
+
+FIG24_ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL")
+GRID_TEMPS = (60.0, 100.0)
+GRID_FREQS = (None, 250e6, 62.5e6)     # default, down-clocked, crawl
+
+
+def _grid(granularity):
+    arms = [sim.get_arm(n).with_system(refresh_granularity=granularity)
+            for n in FIG24_ARMS]
+    return sim.sweep(arms, temps=GRID_TEMPS, freqs=GRID_FREQS)
+
+
+def test_row_stall_never_exceeds_bank_across_fig24_grid():
+    """ISSUE invariant: on every Fig-24 arm × {60,100} °C × {default,
+    250 MHz, 62.5 MHz} the row-granular refresh stall is ≤ the
+    bank-granular one, and refresh energy is exactly equal."""
+    bank = _grid("bank")
+    row = _grid("row")
+    assert len(bank) == len(row) == len(FIG24_ARMS) * len(GRID_TEMPS) \
+        * len(GRID_FREQS)
+    refreshed_points = 0
+    for b, r in zip(bank, row):
+        assert r.arm == b.arm and r.freq_hz == b.freq_hz
+        assert _le(r.refresh_stall_s, b.refresh_stall_s)
+        # granularity moves time, never energy — exact, not approx
+        assert r.memory["refresh_j"] == b.memory["refresh_j"]
+        assert r.memory["read_j"] == b.memory["read_j"]
+        assert r.memory["write_j"] == b.memory["write_j"]
+        assert r.memory_j == b.memory_j
+        assert r.refresh_free == b.refresh_free
+        if b.memory["refresh_j"] > 0.0:
+            refreshed_points += 1
+            assert r.rows_refreshed > 0
+            assert 0.0 <= r.row_hidden_frac <= 1.0
+        else:
+            assert r.rows_refreshed == 0
+    assert refreshed_points > 0            # the grid exercises refresh
+
+
+def test_bank_default_is_bit_identical_to_explicit_bank():
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(temp_c=100.0,
+                                                 alloc_policy="lifetime")
+    explicit = sim.run(arm.with_system(refresh_granularity="bank"))
+    assert sim.run(arm).to_dict() == explicit.to_dict()
+
+
+def test_row_granularity_strictly_cuts_stall_on_flagged_config():
+    """Acceptance: the hot/full/down-clocked config that flags
+    pulse_exceeds_retention under bank granularity stops flagging under
+    row granularity, strictly reduces refresh_stall_s, and keeps refresh
+    energy equal to machine precision."""
+    base = sim.get_arm("DuDNN+CAMEL").with_system(temp_c=100.0,
+                                                  alloc_policy="lifetime")
+    slow = FixedClock(freq_hz=250e6)
+    bank = sim.run(base.with_cost(slow))
+    row = sim.run(base.with_system(refresh_granularity="row")
+                  .with_cost(slow))
+    assert bank.pulse_exceeds_retention          # whole-bank pulse > interval
+    assert not row.pulse_exceeds_retention       # one row's pulse fits
+    assert row.refresh_stall_s < bank.refresh_stall_s
+    assert row.memory["refresh_j"] == bank.memory["refresh_j"]
+    assert row.latency_s < bank.latency_s
+    assert row.rows_refreshed > 0
+    assert 0.0 < row.row_hidden_frac < 1.0
+    assert row.memory["granularity"] == "row"
+    assert any(b["rows_refreshed"] > 0 for b in row.memory["banks"])
+
+
+def test_pulse_exceeds_retention_clears_when_row_fits():
+    """The saturated-bank replay from tests/test_cost.py: the 8 µs
+    whole-bank pulse exceeds the 6.7 µs interval, but one row's pulse is
+    ~10 ns — row granularity must clear the flag."""
+    cfg = ed.EDRAMConfig()
+    words = 4000
+    events = [TraceEvent(0.0, "BIG", "big", "write", WORD * words),
+              TraceEvent(0.0, "BIG", "big", "read", WORD * words)]
+    schedule = [("BIG", 0.0, 10e-6)]
+    kw = dict(op_schedule=schedule, temp_c=60.0, duration_s=10e-6,
+              refresh_policy="always", alloc_policy="first_fit",
+              freq_hz=500e6)
+    bank = replay_timeline(events, cfg, **kw)
+    row = replay_timeline(events, cfg, granularity="row", **kw)
+    assert bank.pulse_exceeds_retention
+    assert not row.pulse_exceeds_retention
+    assert _le(row.refresh_stall_s, bank.refresh_stall_s)
+    assert row.refresh_j == bank.refresh_j
+    assert row.granularity == "row" and bank.granularity == "bank"
+    assert row.rows_refreshed > 0
+
+
+def test_row_report_roundtrips_through_json():
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL").with_system(
+        temp_c=100.0, alloc_policy="lifetime", refresh_granularity="row"))
+    assert rep.rows_refreshed > 0
+    back = sim.ArmReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back == rep
+    assert back.rows_refreshed == rep.rows_refreshed
+    assert back.row_hidden_frac == rep.row_hidden_frac
+    assert back.memory["granularity"] == "row"
+    assert back.config["system"]["refresh_granularity"] == "row"
+
+
+def test_additive_stall_total_is_granularity_invariant():
+    """Under the additive model one tick's row pulses serialize to the
+    same port time as the bank pulse — stall and energy both match."""
+    arm = sim.get_arm("DuDNN+CAMEL").with_system(temp_c=100.0,
+                                                 alloc_policy="lifetime")
+    bank = sim.run(arm, timing="additive")
+    row = sim.run(arm.with_system(refresh_granularity="row"),
+                  timing="additive")
+    assert row.refresh_stall_s == bank.refresh_stall_s
+    assert row.memory["refresh_j"] == bank.memory["refresh_j"]
+    assert row.rows_refreshed > 0          # rows are still counted
+
+
+# ------------------------------------------------- leakage energy charge
+
+def test_leakage_is_charged_over_wall_clock_latency():
+    arm = sim.get_arm("DuDNN+CAMEL")
+    base = sim.run(arm)
+    leak = sim.run(arm.with_system(charge_leakage=True))
+    assert base.leakage_j == 0.0
+    kb = arm.system.onchip_bits / 8.0 / 1024.0
+    want = arm.system.edram.leakage_mw_per_kb * 1e-3 * kb * leak.latency_s
+    assert leak.leakage_j == pytest.approx(want, rel=1e-12)
+    assert leak.latency_s == base.latency_s        # leakage moves energy only
+    assert leak.energy_j == pytest.approx(base.energy_j + leak.leakage_j)
+
+
+def test_sram_arm_leaks_at_the_sram_rate():
+    arm = sim.get_arm("FR+SRAM").with_system(charge_leakage=True)
+    rep = sim.run(arm)
+    kb = arm.system.onchip_bits / 8.0 / 1024.0
+    want = arm.system.edram.sram_leakage_mw_per_kb * 1e-3 * kb \
+        * rep.latency_s
+    assert rep.leakage_j == pytest.approx(want, rel=1e-12)
+
+
+def test_energy_optimal_dvfs_point_is_interior_with_leakage():
+    """ROADMAP follow-up: without the leakage term the slowest clock is
+    always energy-optimal (dynamic compute energy ∝ V² only falls as f
+    drops); charging leakage × wall-clock makes slow points pay for the
+    time they stretch over, so the optimum moves to an interior point."""
+    freqs = [DVFSState(freq_hz=f)
+             for f in (500e6, 250e6, 125e6, 62.5e6, 31.25e6)]
+    base = sim.get_arm("DuDNN+CAMEL").with_system(refresh_policy="none")
+    no_leak = sim.sweep([base], freqs=freqs)
+    leak = sim.sweep([base.with_system(refresh_policy="none",
+                                       charge_leakage=True)], freqs=freqs)
+    best_free = min(range(len(freqs)), key=lambda i: no_leak[i].energy_j)
+    assert best_free == len(freqs) - 1             # slowest looks free
+    best = min(range(len(freqs)), key=lambda i: leak[i].energy_j)
+    assert 0 < best < len(freqs) - 1               # now interior
+    assert all(r.leakage_j > 0.0 for r in leak)
+    # slower point, more leakage charged
+    assert leak[-1].leakage_j > leak[0].leakage_j
+
+
+# --------------------------------- memory-bound (non-linear) cost model
+
+@dataclasses.dataclass(frozen=True)
+class MemoryRailPoint(OperatingPoint):
+    """An operating point whose bank ports stay on a fixed memory rail:
+    MAC time scales with the core clock while port time does not, so op
+    time is non-linear in 1/f (flat once port words dominate)."""
+    mem_freq_hz: float = 500e6
+
+    def op_seconds(self, work, mac_rate_s: float) -> float:
+        mac_s = work.macs / mac_rate_s if mac_rate_s > 0.0 else 0.0
+        port_s = (work.port_words / self.mem_freq_hz
+                  if self.mem_freq_hz > 0.0 else 0.0)
+        return max(mac_s, port_s)
+
+
+def test_op_seconds_port_branch_dominates_mac_work():
+    """PR 4 follow-up: the non-linear max() path — port-word work
+    dominating MAC work — decides the op time."""
+    point = OperatingPoint(freq_hz=1e8)
+    bound = point.op_seconds(OpWork(macs=100.0, port_words=1e6), 1e12)
+    assert bound == pytest.approx(1e6 / 1e8)       # port time, not MAC time
+    # drop the port work and the same op is ~free
+    assert point.op_seconds(OpWork(macs=100.0), 1e12) == \
+        pytest.approx(1e-10)
+
+
+def test_memory_bound_op_time_is_nonlinear_in_frequency():
+    """On a fixed memory rail, a memory-bound op's time is flat across
+    core clocks (port-bound knee) and only turns ∝ 1/f once MAC work
+    takes over — halving f does NOT halve throughput."""
+    work = OpWork(macs=4e6, port_words=4e6)        # port_s = 8 ms on the rail
+    mac_rate_per_hz = 4.0                          # MAC/s per core Hz
+
+    def at(freq_hz):
+        point = MemoryRailPoint(freq_hz=freq_hz)
+        fn = op_timer(point, mac_rate_per_hz * freq_hz)
+        from repro.core.schedule import Op
+        return fn(Op("MB", work, (), ()))
+
+    port_s = 4e6 / 500e6
+    assert at(500e6) == pytest.approx(port_s)      # mac_s 2 ms < port 8 ms
+    assert at(250e6) == pytest.approx(port_s)      # still port-bound: flat
+    assert at(125e6) == pytest.approx(port_s)      # knee: mac_s == port_s
+    assert at(62.5e6) == pytest.approx(2 * port_s)  # mac-bound at last

@@ -1,0 +1,137 @@
+"""Hypothesis property tests for row-granular refresh pulse placement
+(optional-dep gated like tests/test_bfp.py): across random bank
+geometries, occupancies, and port-busy timelines —
+
+- placed (hidden) row pulses never overlap each other or a busy
+  interval recorded by ``BankState.occupy_port``,
+- every pulse lands inside its own retention interval (hidden pulses
+  finish by the deadline; preempting runs start exactly at it),
+- hidden + stalled row counts sum to rows × ticks,
+- refresh *energy* from ``RefreshScheduler.account`` is bit-identical
+  across granularities (placement never enters the ∫occ·dt integral).
+"""
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings
+
+from repro.memory import BankGeometry, BankState, RefreshScheduler
+
+EPS = 1e-9                     # float-tolerance for interval comparisons
+
+_geometries = st.builds(
+    BankGeometry,
+    word_bits=st.just(58),
+    words_per_bank=st.integers(min_value=8, max_value=256),
+    n_banks=st.just(1),
+    rows_per_bank=st.integers(min_value=0, max_value=32),
+)
+
+# busy spans as (start, width) pairs on a [0, 10] s timeline
+_busy_spans = st.lists(
+    st.tuples(st.floats(min_value=0.0, max_value=9.0),
+              st.floats(min_value=0.01, max_value=2.0)),
+    max_size=12)
+
+
+@st.composite
+def _scenarios(draw):
+    geom = draw(_geometries)
+    peak = draw(st.integers(min_value=1, max_value=geom.words_per_bank))
+    interval = draw(st.floats(min_value=0.5, max_value=4.0))
+    duration = draw(st.floats(min_value=0.1, max_value=10.0))
+    freq = draw(st.sampled_from([20.0, 100.0, 1000.0]))
+    bank = BankState(0, geom)
+    bank.peak_words = peak
+    bank.occ_bit_s = float(peak * geom.word_bits) * duration
+    for s, w in sorted(draw(_busy_spans)):
+        bank.occupy_port(s, s + w)
+    return bank, interval, duration, freq
+
+
+def _overlaps(a0, a1, b0, b1):
+    return a0 < b1 - EPS and b0 < a1 - EPS
+
+
+@given(_scenarios())
+@settings(max_examples=120, deadline=None)
+def test_row_pulses_never_overlap_busy_or_each_other(scenario):
+    bank, interval, duration, freq = scenario
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=interval,
+                             granularity="row")
+    pulses = sched.place_pulses(bank, duration, freq)
+    hidden = [(p.start_s, p.start_s + p.words / freq)
+              for p in pulses if p.hidden]
+    for i, (a0, a1) in enumerate(hidden):
+        for b0, b1 in hidden[i + 1:]:
+            assert not _overlaps(a0, a1, b0, b1)
+        for b0, b1 in bank.busy_intervals:
+            assert not _overlaps(a0, a1, b0, b1)
+
+
+@given(_scenarios())
+@settings(max_examples=120, deadline=None)
+def test_every_pulse_lands_in_its_own_retention_interval(scenario):
+    bank, interval, duration, freq = scenario
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=interval,
+                             granularity="row")
+    for p in sched.place_pulses(bank, duration, freq):
+        lo = (p.index - 1) * interval
+        deadline = min(p.index * interval, duration)
+        assert p.deadline_s == pytest.approx(deadline)
+        if p.hidden:
+            width = p.words / freq
+            assert lo - EPS <= p.start_s
+            assert p.start_s + width <= deadline + EPS
+        else:
+            # a preempting run starts exactly at its deadline and
+            # charges its rows' total port time
+            assert p.start_s == deadline
+            assert p.stall_s == pytest.approx(p.words / freq)
+
+
+@given(_scenarios())
+@settings(max_examples=120, deadline=None)
+def test_hidden_plus_stalled_rows_sum_to_rows_times_ticks(scenario):
+    bank, interval, duration, freq = scenario
+    sched = RefreshScheduler("always", temp_c=60.0, interval_s=interval,
+                             granularity="row")
+    pulses = sched.place_pulses(bank, duration, freq)
+    rows = bank.geometry.rows_for(bank.peak_words)
+    ticks = math.ceil(duration / interval)
+    n_hidden = sum(p.rows for p in pulses if p.hidden)
+    n_stalled = sum(p.rows for p in pulses if not p.hidden)
+    assert n_hidden + n_stalled == rows * ticks
+    # words are conserved per tick: every occupied word is pulsed once
+    for k in range(1, ticks + 1):
+        assert sum(p.words for p in pulses if p.index == k) == \
+            bank.peak_words
+
+
+@given(_scenarios())
+@settings(max_examples=60, deadline=None)
+def test_refresh_energy_is_granularity_invariant(scenario):
+    bank, interval, duration, freq = scenario
+    decisions = {}
+    for gran in ("bank", "row"):
+        b = BankState(bank.index, bank.geometry)
+        b.peak_words = bank.peak_words
+        b.occ_bit_s = bank.occ_bit_s
+        b.max_resident_s = 10.0 * interval     # force needs_refresh
+        for s, e in bank.busy_intervals:
+            b.occupy_port(s, e)
+        sched = RefreshScheduler("always", temp_c=60.0,
+                                 interval_s=interval, retention_s=interval,
+                                 granularity=gran)
+        placements = {b.index: sched.place_pulses(b, duration, freq)}
+        (decisions[gran],) = sched.account(
+            [b], duration, freq, 10.0, 20.0, placements=placements)
+    assert decisions["row"].refresh_j == decisions["bank"].refresh_j
+    assert decisions["row"].refresh_read_j == \
+        decisions["bank"].refresh_read_j
+    assert decisions["row"].refresh_restore_j == \
+        decisions["bank"].refresh_restore_j
+    assert decisions["row"].stall_s <= decisions["bank"].stall_s + EPS

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""CI gate for the row-granularity fig24 smoke run.
+
+Usage: check_refresh_smoke.py BANK_JSON ROW_JSON
+
+Both inputs are ``benchmarks.run --json`` records from fig24 frequency
+sweeps — BANK_JSON from the bank-granularity run, ROW_JSON from the
+``--granularity row`` run over the same frequencies.  Asserts, per
+matching (arm, freq_hz) operating point:
+
+- the row run's ``refresh_stall_s`` is <= the bank run's (row pulses
+  interleave with compute at wordline boundaries, so they can only hide
+  more), and
+- the row run actually refreshed rows wherever the bank run stalled.
+
+Also requires the sweep to include the hot (T100) operating point — the
+configuration whose bank-granular pulse exceeds the retention interval.
+"""
+import json
+import sys
+
+
+def _freq_records(path):
+    with open(path) as f:
+        records = json.load(f)
+    out = {}
+    for r in records:
+        if r.get("freq_hz") is None or "refresh_stall_s" not in r:
+            continue
+        if r.get("name", "").endswith("/WARN"):
+            continue
+        out[(r["arm"], r["freq_hz"])] = r
+    return out
+
+
+def main(bank_path: str, row_path: str) -> int:
+    bank = _freq_records(bank_path)
+    row = _freq_records(row_path)
+    keys = sorted(set(bank) & set(row))
+    if not keys:
+        print("ERROR: no matching (arm, freq_hz) records between "
+              f"{bank_path} and {row_path}")
+        return 1
+    if not any("T100" in arm for arm, _ in keys):
+        print("ERROR: the sweep is missing the hot (T100) operating point")
+        return 1
+    failures = 0
+    for key in keys:
+        b, r = bank[key], row[key]
+        # ≤ up to float rounding: a fully-preempting tick's row stall is
+        # a sum of per-row divisions vs the bank pulse's single division
+        ok = r["refresh_stall_s"] <= b["refresh_stall_s"] * (1 + 1e-9) \
+            + 1e-18
+        if b["refresh_stall_s"] > 0.0:
+            ok = ok and r.get("rows_refreshed", 0) > 0
+        status = "ok" if ok else "FAIL"
+        print(f"{status}: {key[0]} @ {key[1] / 1e6:g} MHz  "
+              f"bank_stall={b['refresh_stall_s']:.3e}s  "
+              f"row_stall={r['refresh_stall_s']:.3e}s  "
+              f"rows={r.get('rows_refreshed', 0)}")
+        failures += not ok
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))
