@@ -14,8 +14,8 @@ refresh stall vs additive at identical refresh energy).
 ``run(freqs=[...])`` (``--freq``) re-runs the hiding comparison at each
 operating point — pulse widths scale with 1/f against wall-clock
 retention deadlines, so the hiding rate degrades as the clock drops and
-a ``pulse_exceeds_retention`` warning row appears once a bank's pulse
-outlasts its retention interval.
+a structured ``pulse_exceeds_retention`` warning goes to stderr
+(``repro.obs.log``) once a bank's pulse outlasts its retention interval.
 
 ``run(granularity="row")`` (``--granularity row``) switches the per-arm
 rows to row-granular refresh pulses; independently, the
@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from repro import sim
 from repro.core import hwmodel as hw
+from repro.obs import log
 
 # seed DuDNN block configs (Table III / Fig 23-24 scale)
 CONFIGS = [
@@ -113,21 +114,21 @@ def _hiding_row(freq_hz=None, granularity=None) -> tuple:
         "arm": "DuDNN+CAMEL",
         "freq_hz": tml.freq_hz,
         "config": tml.config,
-        "_warn": tml.pulse_exceeds_retention,
     }, tml)
 
 
 def _append_hiding(rows: list, freq_hz=None, granularity=None):
-    """One hiding row (+ a warning line when a bank's pulse can never
-    hide inside its retention interval).  Returns the timeline
+    """One hiding row (+ a structured stderr warning when a bank's pulse
+    can never hide inside its retention interval).  Returns the timeline
     ``ArmReport`` the row was built from."""
     row, rep = _hiding_row(freq_hz, granularity)
-    warn = row.pop("_warn")
     rows.append(row)
-    if warn:
-        rows.append(f"{row['row'].split(',', 1)[0]}/WARN,0,"
-                    f"refresh pulse exceeds the retention interval on >=1 "
-                    f"bank - refresh there can never hide")
+    if rep.pulse_exceeds_retention:
+        log.warn("pulse_exceeds_retention", arm=rep.arm,
+                 freq_mhz=rep.freq_hz / 1e6,
+                 granularity=rep.memory["granularity"],
+                 detail="refresh pulse outlasts the retention interval "
+                        "on >=1 bank; refresh there can never hide")
     return rep
 
 

@@ -14,18 +14,27 @@ adds a frequency sweep of the CAMEL arm at the nominal and hot operating
 points: op time scales with 1/f while retention deadlines stay
 wall-clock, so the rows show the refresh hiding rate and the
 refresh-free verdict flipping across operating points; a bank whose
-pulse outlasts its retention interval gets a one-line
-``pulse_exceeds_retention`` warning row.  ``run(granularity="row")``
+pulse outlasts its retention interval triggers a structured
+``pulse_exceeds_retention`` warning on stderr (``repro.obs.log`` — set
+``REPRO_LOG`` to tune the threshold).  ``run(granularity="row")``
 (``--granularity row``) switches every simulated arm to row-granular
 refresh pulses: the hot/slow points hide refresh row by row (rows and
 hiding fraction surfaced per row record), refresh *energy* is unchanged,
 and only banks whose single-row pulse outlasts the interval still warn.
+
+``run(trace_dir=...)`` (``--trace DIR``) additionally captures a
+flight-recorder trace per arm — the four registry arms plus the hot
+``DuDNN+CAMEL/T100`` point — reconciles each against its report, and
+writes Chrome Trace Event JSON (one ``<arm>.trace.json`` per arm; open
+in Perfetto, validate with ``tools/check_trace.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 
-from repro import sim
+from repro import obs, sim
+from repro.obs import log
 
 # (label, branch blocks, branch ch, backbone ch) ~ paper's B-x + ResNet-y
 ARCHS = [
@@ -81,13 +90,59 @@ def _freq_rows(timing, parallel, freqs, granularity=None) -> list:
                 "config": rep.config,
             })
             if rep.pulse_exceeds_retention:
-                rows.append(
-                    f"{tag}/WARN,0,refresh pulse exceeds the retention "
-                    f"interval on >=1 bank - refresh there can never hide")
+                log.warn("pulse_exceeds_retention", arm=arm.name,
+                         freq_mhz=rep.freq_hz / 1e6,
+                         granularity=rep.memory["granularity"],
+                         detail="refresh pulse outlasts the retention "
+                                "interval on >=1 bank; refresh there "
+                                "can never hide")
     return rows
 
 
-def run(timing=None, parallel=None, freqs=None, granularity=None) -> list:
+def _trace_arms(granularity=None) -> list:
+    """The arms ``--trace`` captures: the four registry arms plus the hot
+    100 °C CAMEL point (lifetime allocation), as in the freq sweep."""
+    arms = [sim.get_arm(name) for name in ARMS]
+    arms.append(dataclasses.replace(
+        sim.get_arm("DuDNN+CAMEL").with_system(
+            temp_c=100.0, alloc_policy="lifetime"),
+        name="DuDNN+CAMEL/T100"))
+    if granularity is not None:
+        arms = [a.with_system(refresh_granularity=granularity)
+                for a in arms]
+    return arms
+
+
+def _trace_rows(trace_dir, granularity=None) -> list:
+    """Flight-recorder captures: one traced timeline run per arm,
+    reconciled span-vs-report, exported as ``DIR/<arm>.trace.json``.
+    Always runs ``timing="timeline"`` — reconciliation is defined
+    against the timeline model's span stream."""
+    out = pathlib.Path(trace_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    rows: list = []
+    for arm in _trace_arms(granularity):
+        rep = sim.run(arm, trace=True, timing="timeline")
+        res = obs.reconcile(rep.trace, rep)
+        path = out / (arm.name.replace("/", "_") + ".trace.json")
+        obs.export_chrome_trace(rep.trace, path, report=rep)
+        if not res.ok:
+            log.error("trace_reconcile_mismatch", arm=arm.name,
+                      detail=str(res))
+        rows.append({
+            "row": (f"fig24/trace/{arm.name},0,"
+                    f"file={path.name};spans={len(rep.trace.spans)};"
+                    f"counters={len(rep.trace.counters)};"
+                    f"reconciled={res.ok}"),
+            "arm": arm.name,
+            "trace_file": str(path),
+            "reconciled": res.ok,
+        })
+    return rows
+
+
+def run(timing=None, parallel=None, freqs=None, granularity=None,
+        trace_dir=None) -> list:
     rows: list = []
     # one grid sweep: arms × archs, in deterministic order
     arms = [sim.get_arm(name) for name in ARMS]
@@ -123,6 +178,8 @@ def run(timing=None, parallel=None, freqs=None, granularity=None) -> list:
             f"refresh_free={camel.refresh_free}")
     if freqs:
         rows += _freq_rows(timing, parallel, freqs, granularity)
+    if trace_dir is not None:
+        rows += _trace_rows(trace_dir, granularity)
     rows.append("fig24/claim,0,paper=DuDNN+CAMEL best TTA & >=2x ETA")
     return rows
 

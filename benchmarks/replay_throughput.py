@@ -1,0 +1,146 @@
+"""Timeline-replay throughput: how many schedule ops per second the
+closed-loop memory engine sustains on a large synthetic trace.
+
+The ROADMAP's "raw speed" item needs a measured baseline before any
+vectorization work: this suite builds a deterministic synthetic trace
+(``n_ops`` ops in a produce→consume→free chain, every op touching
+multiple banks) and times ``repro.sim.timeline.replay_timeline`` —
+the full closed-loop walk + pulse placement + energy accounting — at
+bank and row refresh granularity, with refresh forced on (``always``
+policy, ~``TICKS`` retention ticks inside the trace) so the scheduler
+does real placement work.
+
+Rows: ``replay_throughput/<granularity>,us_per_op,ops_per_s=...``.
+A third row replays with a flight recorder attached
+(``repro.obs.SpanRecorder``) to price the observation overhead.
+
+The committed record lives in ``BENCH_replay.json`` (repo root);
+re-measure and append with::
+
+    PYTHONPATH=src python -m benchmarks.replay_throughput --update
+
+Each record carries the date, commit-independent workload shape, and
+ops/sec per granularity, so the trajectory stays comparable across PRs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.core import hwmodel as hw
+from repro.core.schedule import TraceEvent
+from repro.obs.recorder import SpanRecorder
+from repro.sim.timeline import replay_timeline
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_replay.json"
+
+# synthetic workload shape (fixed: records stay comparable across PRs)
+N_OPS = 2000
+WORDS_PER_TENSOR = 4096          # ~4 rows at the default 1024-word rows
+TICKS = 24                       # retention ticks inside the trace
+FREQ_HZ = 500e6
+
+
+def synthetic_trace(n_ops: int = N_OPS,
+                    words: int = WORDS_PER_TENSOR) -> tuple:
+    """A produce→consume→free chain: op ``k`` writes tensor ``k``, reads
+    tensor ``k-1``, frees tensor ``k-2`` — at most three tensors live, so
+    the trace replays on the stock bank geometry at any length.  Returns
+    ``(events, op_schedule, duration_s, cfg)``."""
+    cfg = hw.SystemConfig().edram
+    bits = float(words * cfg.word_bits)
+    # op duration ~ the port service time of its traffic, so the walk's
+    # busy intervals and idle gaps are both non-trivial
+    dt = 2.0 * words / FREQ_HZ
+    events: list = []
+    op_schedule: list = []
+    for k in range(n_ops):
+        t, op = k * dt, f"op{k}"
+        op_schedule.append((op, t, t + dt))
+        events.append(TraceEvent(time=t, op=op, tensor=f"t{k}",
+                                 kind="write", bits=bits))
+        if k >= 1:
+            events.append(TraceEvent(time=t, op=op, tensor=f"t{k-1}",
+                                     kind="read", bits=bits))
+        if k >= 2:
+            events.append(TraceEvent(time=t, op=op, tensor=f"t{k-2}",
+                                     kind="free", bits=bits))
+    return events, op_schedule, n_ops * dt, cfg
+
+
+def _measure(granularity: str, recorder=None, n_ops: int = N_OPS) -> dict:
+    """One timed replay; returns the measurement record (no I/O)."""
+    events, op_schedule, duration_s, cfg = synthetic_trace(n_ops)
+    t0 = time.perf_counter()
+    rep = replay_timeline(
+        events, cfg, op_schedule=op_schedule, temp_c=100.0,
+        duration_s=duration_s, refresh_policy="always",
+        freq_hz=FREQ_HZ, retention_s=duration_s / TICKS,
+        granularity=granularity, recorder=recorder)
+    wall = time.perf_counter() - t0
+    return {
+        "granularity": granularity,
+        "traced": recorder is not None,
+        "n_ops": n_ops,
+        "events": len(events),
+        "wall_s": wall,
+        "ops_per_s": n_ops / wall if wall > 0 else 0.0,
+        "pulses": rep.timeline["pulses"],
+        "spans": len(recorder.spans) if recorder is not None else 0,
+    }
+
+
+def measurements(n_ops: int = N_OPS) -> list:
+    return [
+        _measure("bank", n_ops=n_ops),
+        _measure("row", n_ops=n_ops),
+        _measure("bank", recorder=SpanRecorder(), n_ops=n_ops),
+    ]
+
+
+def run() -> list:
+    """Benchmark-harness entry (``benchmarks.run --only replay``)."""
+    rows = []
+    for m in measurements():
+        tag = m["granularity"] + ("+trace" if m["traced"] else "")
+        rows.append({
+            "row": (f"replay_throughput/{tag},"
+                    f"{m['wall_s'] / m['n_ops'] * 1e6:.2f},"
+                    f"ops_per_s={m['ops_per_s']:.0f};"
+                    f"n_ops={m['n_ops']};events={m['events']};"
+                    f"pulses={m['pulses']};spans={m['spans']}"),
+            "granularity": m["granularity"],
+            "ops_per_s": m["ops_per_s"],
+        })
+    return rows
+
+
+def update_bench(path=BENCH_PATH) -> dict:
+    """Append today's measurement to the committed trajectory file."""
+    path = pathlib.Path(path)
+    data = (json.loads(path.read_text()) if path.exists()
+            else {"benchmark": "replay_throughput",
+                  "workload": {"n_ops": N_OPS,
+                               "words_per_tensor": WORDS_PER_TENSOR,
+                               "ticks": TICKS, "freq_hz": FREQ_HZ},
+                  "records": []})
+    record = {"date": time.strftime("%Y-%m-%d"),
+              "measurements": measurements()}
+    data["records"].append(record)
+    path.write_text(json.dumps(data, indent=1) + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help=f"append a record to {BENCH_PATH.name}")
+    args = ap.parse_args()
+    if args.update:
+        rec = update_bench()
+        print(f"appended {rec['date']} record to {BENCH_PATH}")
+    for r in run():
+        print(r["row"] if isinstance(r, dict) else r)

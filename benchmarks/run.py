@@ -14,10 +14,16 @@ self-describing.  ``--list`` prints the registered suites.
 each becomes a ``FixedClock`` cost model), and ``--granularity bank|row``
 the refresh pulse unit (row-granular pulses interleave with compute at
 wordline boundaries); all are forwarded to the suites that accept them
-(currently fig24 and bank_occupancy).  Rows from a frequency sweep carry
-a top-level ``freq_hz`` field in the ``--json`` records — and the
-granularity-aware rows a ``granularity`` / ``refresh_stall_s`` pair — so
-sweep outputs stay machine-comparable across PRs.
+(currently fig24 and bank_occupancy).  ``--trace DIR`` captures
+flight-recorder traces for the suites that support it (fig24 writes one
+reconciled Chrome-trace JSON per arm; open in Perfetto, validate with
+``tools/check_trace.py`` — see ``docs/observability.md``).  Rows from a
+frequency sweep carry a top-level ``freq_hz`` field in the ``--json``
+records — and the granularity-aware rows a ``granularity`` /
+``refresh_stall_s`` pair — so sweep outputs stay machine-comparable
+across PRs.  Diagnostics (refresh warnings, sweep progress) go through
+``repro.obs.log`` to stderr (level via the ``REPRO_LOG`` env var),
+keeping stdout pure CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig24] [--skip-slow]
                                             [--json out.json] [--list]
@@ -25,6 +31,7 @@ sweep outputs stay machine-comparable across PRs.
                                             [--parallel 4]
                                             [--freq 2.5e8,5e8]
                                             [--granularity row]
+                                            [--trace traces/]
 """
 from __future__ import annotations
 
@@ -37,7 +44,8 @@ import traceback
 
 from benchmarks import (bank_occupancy, bfp_fidelity, fig21_ablations,
                         fig22_retention, fig23_lifetime, fig24_tta_eta,
-                        table2_accuracy, table3_arraysize)
+                        replay_throughput, table2_accuracy,
+                        table3_arraysize)
 
 SUITES = {
     "table2": table2_accuracy.run,      # accuracy arms (slow-ish: trains)
@@ -48,6 +56,7 @@ SUITES = {
     "table3": table3_arraysize.run,     # array size vs lifetime
     "bfp": bfp_fidelity.run,            # §III-E fidelity + kernel timing
     "bank_occupancy": bank_occupancy.run,   # repro.memory controller
+    "replay": replay_throughput.run,    # timeline-engine ops/sec
 }
 SLOW = {"table2", "fig21", "bfp"}       # these train models on CPU
 
@@ -114,6 +123,11 @@ def main() -> None:
                     help="refresh pulse unit for suites that sim arms "
                          "(row = per-wordline pulses; default: the "
                          "system default, bank)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="flight-recorder capture directory for suites "
+                         "that support it (fig24 writes one Chrome-trace "
+                         "JSON per arm; open in Perfetto, validate with "
+                         "tools/check_trace.py)")
     args = ap.parse_args()
     freqs = ([float(f) for f in args.freq.split(",")]
              if args.freq else None)
@@ -149,7 +163,8 @@ def main() -> None:
             kwargs = {k: v for k, v in (("timing", args.timing),
                                         ("parallel", args.parallel),
                                         ("freqs", freqs),
-                                        ("granularity", args.granularity))
+                                        ("granularity", args.granularity),
+                                        ("trace_dir", args.trace))
                       if v is not None and k in accepted}
             for row in SUITES[name](**kwargs):
                 emit(row)

@@ -120,6 +120,11 @@ class BankState:
         # port busy intervals [(start_s, end_s), ...] recorded by the
         # timeline model's closed-loop walk; kept sorted and merged
         self._busy: list[tuple[float, float]] = []
+        # optional observability hook: called as (bank, now) after every
+        # occupancy change (allocate/free).  The flight recorder
+        # (repro.obs) samples its per-bank occupancy counter here; when
+        # unset (the default) occupancy changes cost nothing extra.
+        self.on_occupancy = None
 
     # -- port timeline (closed-loop timing model) ------------------------
     def occupy_port(self, start: float, end: float) -> None:
@@ -214,6 +219,8 @@ class BankState:
                                            scale=scale)
         self.used_words += words
         self.peak_words = max(self.peak_words, self.used_words)
+        if self.on_occupancy is not None:
+            self.on_occupancy(self, now)
 
     def rewrite(self, tensor: str, now: float) -> None:
         """In-place overwrite: residency lifetime restarts at ``now``."""
@@ -229,6 +236,8 @@ class BankState:
         self.used_words -= r.words
         dur = (now - r.write_t) * r.scale
         self.max_resident_s = max(self.max_resident_s, dur)
+        if self.on_occupancy is not None:
+            self.on_occupancy(self, now)
         return dur
 
     def finalize(self, now: float) -> None:

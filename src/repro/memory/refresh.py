@@ -100,6 +100,23 @@ class PulsePlacement(NamedTuple):
     rows: int = 1              # pulse multiplicity (a preempting run)
 
 
+def placement_interval(p: PulsePlacement,
+                       freq_hz: float) -> tuple[float, float]:
+    """The port interval a placement occupies on the timeline, in
+    seconds — the flight recorder's span for the pulse.
+
+    A *hidden* pulse sits inside its idle window/gap:
+    ``[start_s, start_s + port_service_s(words, freq_hz))`` — the exact
+    width :meth:`RefreshScheduler.place_pulses` packed with, so recorded
+    spans can never overlap a busy interval or each other.  A preempting
+    pulse (or aggregated run of row pulses) serializes at its deadline:
+    ``[start_s, start_s + stall_s)``.
+    """
+    if p.hidden:
+        return p.start_s, p.start_s + port_service_s(p.words, freq_hz)
+    return p.start_s, p.start_s + p.stall_s
+
+
 class RefreshScheduler:
     """Decides which banks to refresh and accounts energy + port stalls.
 

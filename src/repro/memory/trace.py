@@ -172,7 +172,8 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 sample_scale: float = 1.0,
                 refresh_guard: float = 1.0,
                 retention_s: Optional[float] = None,
-                granularity: str = "bank") -> ReplayCore:
+                granularity: str = "bank",
+                recorder=None) -> ReplayCore:
     """Walk ``events`` through allocator placement and traffic-energy
     accounting; returns the :class:`ReplayCore` a stall model finishes.
 
@@ -185,6 +186,13 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     SRAM tier that never refreshes.  ``granularity`` sets the refresh
     pulse unit (``"bank"`` | ``"row"`` — see
     :class:`~repro.memory.refresh.RefreshScheduler`).
+
+    ``recorder`` is an optional :class:`repro.obs.SpanRecorder`: the
+    walk then samples per-bank occupancy counters at every
+    allocate/free, records one ``spill`` span per off-chip transfer, and
+    a cumulative ``traffic_j`` counter at each energy-charging event.
+    Observation only — placement, energies, and every counter the
+    report reads are bit-identical with or without it.
     """
     geom = BankGeometry.from_edram(cfg)
     sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
@@ -192,6 +200,13 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                              granularity=granularity)
     alloc = Allocator(geom, policy=alloc_policy,
                       retention_s=sched.retention_s)
+    if recorder is not None:
+        def _sample_occupancy(bank, now):
+            recorder.counter("occupied_words", now, bank.used_words,
+                             bank=bank.index)
+        for b in alloc.banks:
+            b.on_occupancy = _sample_occupancy
+            _sample_occupancy(b, 0.0)
 
     # prepass: expected residency window per tensor (write → free), at
     # trace time — the lifetime-aware allocator colors banks with it.  A
@@ -267,23 +282,35 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 if p.offchip:
                     offchip_j += ev.bits * cfg.dram_pj_per_bit * 1e-12
                     offchip_bits += ev.bits
+                    if recorder is not None:
+                        recorder.span("spill", ev.tensor, ev.time, ev.time,
+                                      op=ev.op, io="write", bits=ev.bits)
                 else:
                     write_j += ev.bits * cfg.write_pj_per_bit * 1e-12
                     for b_idx, _ in p.spans:
                         alloc.banks[b_idx].write_bits += \
                             ev.bits / max(1, len(p.spans))
                     _touch(op_write_words, ev.op, p, ev.bits)
+                if recorder is not None:
+                    recorder.counter("traffic_j", ev.time,
+                                     read_j + write_j + offchip_j)
         elif ev.kind == "read":
             p = alloc.location(ev.tensor)
             if p is None or p.offchip:
                 offchip_j += ev.bits * cfg.dram_pj_per_bit * 1e-12
                 offchip_bits += ev.bits
+                if recorder is not None:
+                    recorder.span("spill", ev.tensor, ev.time, ev.time,
+                                  op=ev.op, io="read", bits=ev.bits)
             else:
                 read_j += ev.bits * cfg.read_pj_per_bit * 1e-12
                 for b_idx, _ in p.spans:
                     alloc.banks[b_idx].read_bits += \
                         ev.bits / max(1, len(p.spans))
                 _touch(op_read_words, ev.op, p, ev.bits)
+            if recorder is not None:
+                recorder.counter("traffic_j", ev.time,
+                                 read_j + write_j + offchip_j)
         elif ev.kind == "free":
             p = alloc.location(ev.tensor)
             if not ev.buffered and p is not None and not p.offchip:
@@ -362,7 +389,8 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
            op_durations: Optional[dict] = None,
            refresh_guard: float = 1.0,
            retention_s: Optional[float] = None,
-           granularity: str = "bank") -> ControllerReport:
+           granularity: str = "bank",
+           recorder=None) -> ControllerReport:
     """Replay ``events`` through the bank-level controller with the
     **additive** stall model (the cross-validation baseline; the
     closed-loop model lives in ``repro.sim.timeline``).
@@ -391,6 +419,11 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             row pulses serialize to the same port time as the bank
             pulse); only the ``pulse_exceeds_retention`` flag and the
             row counters move.
+        recorder: optional ``repro.obs.SpanRecorder`` — records the
+            replay-core observables (occupancy counters, spill spans);
+            the additive model places no pulses, so the trace carries no
+            refresh spans and cannot be reconciled (use the timeline
+            model for that).
 
     Returns:
         A :class:`ControllerReport` (energies in J, stalls in s) with
@@ -401,7 +434,12 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
-        granularity=granularity)
+        granularity=granularity, recorder=recorder)
+    if recorder is not None:
+        recorder.meta.update(timing="additive", schedule_s=duration_s,
+                             granularity=granularity, temp_c=temp_c,
+                             refresh_policy=refresh_policy,
+                             freq_hz=freq_hz)
 
     # bank-conflict stalls: each bank moves one word/cycle/port; an op is
     # stalled by its most-contended bank beyond its own compute time

@@ -1,0 +1,78 @@
+"""Tiny structured logger for benchmark/sim diagnostics.
+
+Benchmark suites print machine-readable CSV rows on **stdout** (and
+``benchmarks.run --json`` collects them as records); anything that is a
+*diagnostic* — warnings about operating points, sweep progress — goes
+through this module to **stderr**, so the two streams stay separable.
+
+One line per event, ``key=value`` fields after the event name::
+
+    [repro:warn] pulse_exceeds_retention arm=DuDNN+CAMEL/T100 freq_mhz=250
+
+The threshold comes from the ``REPRO_LOG`` environment variable
+(``debug`` | ``info`` | ``warn`` | ``error``; default ``warn``) and is
+read per call, so tests and long-running processes can flip it without
+re-importing.  ``force=True`` bypasses the threshold — used when the
+caller explicitly asked for the output (e.g. ``sim.sweep(progress=True)``).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+LEVELS = {"debug": 10, "info": 20, "warn": 30, "error": 40}
+DEFAULT_LEVEL = "warn"
+ENV_VAR = "REPRO_LOG"
+
+
+def threshold() -> int:
+    """The active numeric threshold (unknown env values fall back to the
+    default so a typo never silences errors *and* never spams debug)."""
+    name = os.environ.get(ENV_VAR, DEFAULT_LEVEL).strip().lower()
+    return LEVELS.get(name, LEVELS[DEFAULT_LEVEL])
+
+
+def enabled(level: str) -> bool:
+    return LEVELS.get(level, LEVELS["error"]) >= threshold()
+
+
+def _fmt(value) -> str:
+    if isinstance(value, float):
+        return f"{value:g}"
+    s = str(value)
+    return f'"{s}"' if " " in s else s
+
+
+def log(level: str, event: str, *, force: bool = False,
+        file=None, **fields) -> bool:
+    """Emit one structured line to stderr; returns whether it printed.
+
+    Args:
+        level: ``debug`` | ``info`` | ``warn`` | ``error``.
+        event: short snake_case event name (the grep handle).
+        force: print regardless of the ``REPRO_LOG`` threshold.
+        file: output stream override (default ``sys.stderr``).
+        fields: key=value payload, formatted ``%g`` for floats.
+    """
+    if not (force or enabled(level)):
+        return False
+    parts = [f"[repro:{level}] {event}"]
+    parts += [f"{k}={_fmt(v)}" for k, v in fields.items()]
+    print(" ".join(parts), file=file if file is not None else sys.stderr)
+    return True
+
+
+def debug(event: str, **fields) -> bool:
+    return log("debug", event, **fields)
+
+
+def info(event: str, **fields) -> bool:
+    return log("info", event, **fields)
+
+
+def warn(event: str, **fields) -> bool:
+    return log("warn", event, **fields)
+
+
+def error(event: str, **fields) -> bool:
+    return log("error", event, **fields)

@@ -1,0 +1,141 @@
+"""Span-vs-report reconciliation — the trace as checkable ground truth.
+
+The flight recorder and the :class:`~repro.sim.report.ArmReport` are fed
+by the same engine but through *different aggregation paths*: the report
+sums scalars as the timeline model runs, the recorder keeps every span.
+:func:`reconcile` re-derives the report's stall/refresh scalars from the
+recorded spans and asserts **exact** (``==``) equality, replicating the
+engine's summation grouping (per-bank partial sums in bank order — float
+addition is not associative, so the grouping is part of the contract):
+
+- ``refresh_stall_s`` — per bank, the sum of its pulse spans'
+  ``stall_s`` in recorded order; banks summed in ascending index order
+  (mirrors ``RefreshScheduler.account`` + ``build_report``).
+- ``stall_s`` — the above plus conflict stall, where conflict stall is
+  ``max(makespan, schedule_s) - schedule_s`` and the makespan is the
+  last op/port span end (mirrors ``replay_timeline``).
+- ``refresh_hidden_j`` — per bank, ``refresh_j × hidden / count`` with
+  the hidden/total pulse multiplicities counted from spans and the
+  bank's refresh energy read from its ``refresh_j`` counter sample
+  (energy lives in the trace as a counter series; the hiding *split* is
+  re-derived from spans).
+- ``rows_refreshed`` — the summed ``rows`` multiplicity of all pulse
+  spans under row granularity (0 under bank granularity).
+
+A mismatch means the trace and the report have diverged — i.e. the
+recorder is lying about what the engine did — which is exactly the
+regression this module exists to catch.  Works on a live recorder or on
+one rebuilt from an exported trace file
+(:func:`repro.obs.export.recorder_from_trace`); floats survive the JSON
+round-trip exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.obs.recorder import SpanRecorder
+
+#: report fields reconcile() checks, in reporting order
+RECONCILED_FIELDS = ("stall_s", "refresh_stall_s", "refresh_hidden_j",
+                     "rows_refreshed")
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldCheck:
+    """One reconciled field: the report's value vs the span-derived one."""
+    field: str
+    reported: float
+    derived: float
+
+    @property
+    def ok(self) -> bool:
+        return self.reported == self.derived
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconcileResult:
+    checks: tuple
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    def failures(self) -> list:
+        return [c for c in self.checks if not c.ok]
+
+    def __str__(self) -> str:
+        return "\n".join(
+            f"{'ok ' if c.ok else 'MISMATCH'} {c.field}: "
+            f"report={c.reported!r} derived={c.derived!r}"
+            for c in self.checks)
+
+
+def _field(report, name):
+    """Read a report field from an ``ArmReport`` or its dict form."""
+    if hasattr(report, name):
+        return getattr(report, name)
+    return report[name]
+
+
+def derive(recorder: SpanRecorder) -> dict:
+    """Re-derive the reconciled scalars from the recorded spans/counters.
+
+    Returns ``{"stall_s", "conflict_stall_s", "refresh_stall_s",
+    "refresh_hidden_j", "rows_refreshed", "makespan_s"}``.  Requires a
+    timeline-model trace (``meta["timing"] == "timeline"``).
+    """
+    timing = recorder.meta.get("timing")
+    if timing != "timeline":
+        raise ValueError(
+            f"reconciliation needs a timeline-model trace, got "
+            f"timing={timing!r} (additive/scalar runs aggregate stalls "
+            f"without placing spans)")
+    schedule_s = recorder.meta["schedule_s"]
+
+    makespan = recorder.makespan_s()
+    makespan = max(makespan, schedule_s)
+    conflict_stall_s = makespan - schedule_s
+
+    # per-bank partial sums in ascending bank order — the same grouping
+    # account()/build_report() use, so float totals match bit-for-bit
+    refresh_stall_s = 0.0
+    refresh_hidden_j = 0.0
+    rows = 0
+    row_granular = recorder.meta.get("granularity") == "row"
+    for bank in recorder.banks():
+        pulses = recorder.bank_spans(bank, "refresh", "refresh_stall")
+        if not pulses:
+            continue
+        refresh_stall_s += sum(p.args["stall_s"] for p in pulses)
+        hidden = sum(p.args["rows"] for p in pulses if p.kind == "refresh")
+        count = sum(p.args["rows"] for p in pulses)
+        if row_granular:
+            rows += count
+        samples = recorder.counter_samples("refresh_j", bank=bank)
+        refresh_j = samples[-1].value if samples else 0.0
+        if count:
+            refresh_hidden_j += refresh_j * hidden / count
+
+    return {
+        "makespan_s": makespan,
+        "conflict_stall_s": conflict_stall_s,
+        "refresh_stall_s": refresh_stall_s,
+        "stall_s": conflict_stall_s + refresh_stall_s,
+        "refresh_hidden_j": refresh_hidden_j,
+        "rows_refreshed": rows,
+    }
+
+
+def reconcile(recorder: SpanRecorder, report) -> ReconcileResult:
+    """Check the recorded spans against ``report`` (an ``ArmReport`` or
+    its ``to_dict()`` form); every :data:`RECONCILED_FIELDS` entry must
+    match **exactly**.
+
+    Raises ``ValueError`` on a non-timeline trace; returns a
+    :class:`ReconcileResult` whose ``.ok`` is the verdict.
+    """
+    derived = derive(recorder)
+    checks = [FieldCheck(field=name, reported=_field(report, name),
+                         derived=derived[name])
+              for name in RECONCILED_FIELDS]
+    return ReconcileResult(checks=tuple(checks))

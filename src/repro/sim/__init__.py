@@ -34,6 +34,14 @@ Custom arms are frozen dataclasses (``sim.Arm``) and can be registered
 (``sim.register_arm``); custom pipelines swap stages
 (``sim.Pipeline.with_stage``) — exactly how the timeline model installs
 itself.  See ``docs/sim-api.md`` for the full reference.
+
+Observability is opt-in and observation-only: ``sim.run(arm,
+trace=True)`` threads a ``repro.obs.SpanRecorder`` through the engine
+(op/port/refresh/spill spans + counter series, exportable to
+Perfetto/Chrome tracing and exactly reconcilable against the report);
+``sim.run(arm, profile=True)`` wall-clocks the pipeline stages into
+``report.profile``.  Either way every report number stays bit-identical.
+See ``docs/observability.md``.
 """
 from repro.sim.arm import (ARM_REGISTRY, ITERS_CHAIN, ITERS_TARGET,
                            WORKLOAD_KINDS, Arm, WorkloadSpec, arms, get_arm,

@@ -31,7 +31,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-from concurrent.futures import ProcessPoolExecutor
+import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
 from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core import edram as ed
@@ -75,6 +76,9 @@ class SimContext:
     mem_cfg: object = None         # EDRAMConfig the controller replayed with
     controller: object = None      # ControllerReport (None on scalar path)
     report: object = None          # ArmReport (set by the energy stage)
+    # optional repro.obs.SpanRecorder (sim.run(trace=...)); stages that
+    # support it record spans/counters — observation only, never timing
+    recorder: object = None
 
 
 # ------------------------------------------------------------------ stages
@@ -183,7 +187,7 @@ def stage_memory(arm: Arm, ctx: SimContext) -> None:
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         op_durations=ctx.op_durations, retention_s=retention,
-        granularity=cfg.refresh_granularity)
+        granularity=cfg.refresh_granularity, recorder=ctx.recorder)
 
 
 def _buffered_partition(events) -> tuple[float, list]:
@@ -292,6 +296,11 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
     rel_err = (abs(memory_j - scalar_mem.total_j) / scalar_mem.total_j
                if scalar_mem.total_j > 0 else 0.0)
     iters = arm.iters_to_target
+    if ctx.recorder is not None:
+        ctx.recorder.meta.setdefault("arm", arm.name)
+        ctx.recorder.counter("compute_j", latency_s, compute_j)
+        ctx.recorder.counter("leakage_j", latency_s, leakage_j)
+        ctx.recorder.counter("energy_j", latency_s, energy_j)
     ctx.report = ArmReport(
         arm=arm.name,
         reversible=arm.reversible,
@@ -323,6 +332,7 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
         config=_config_dict(arm),
         memory=_memory_dict(ctrl),
         controller=ctrl,
+        trace=ctx.recorder,
     )
 
 
@@ -443,11 +453,29 @@ class Pipeline:
                 out.append((new_name, fn))
         return Pipeline(tuple(out))
 
-    def run(self, arm: Arm) -> tuple:
-        """Run all stages; returns ``(ArmReport, SimContext)``."""
+    def run(self, arm: Arm, *, recorder=None, profile: bool = False) -> tuple:
+        """Run all stages; returns ``(ArmReport, SimContext)``.
+
+        ``recorder`` (a ``repro.obs.SpanRecorder``) is threaded to every
+        stage via ``ctx.recorder`` and ends up on ``report.trace``;
+        ``profile=True`` wall-clocks each stage (``time.perf_counter``)
+        into ``report.profile`` — both are pure observation, so every
+        report scalar is bit-identical either way."""
         ctx = SimContext()
-        for _, fn in self.stages:
-            fn(arm, ctx)
+        ctx.recorder = recorder
+        stages_s: dict = {}
+        for name, fn in self.stages:
+            if profile:
+                t0 = time.perf_counter()
+                fn(arm, ctx)
+                stages_s[name] = time.perf_counter() - t0
+            else:
+                fn(arm, ctx)
+        if profile and ctx.report is not None:
+            ctx.report = dataclasses.replace(
+                ctx.report,
+                profile={"stages": stages_s,
+                         "total_s": sum(stages_s.values())})
         return ctx.report, ctx
 
 
@@ -478,7 +506,8 @@ def resolve_pipeline(timing: Optional[str] = None,
 
 
 def run(arm: Arm, pipeline: Optional[Pipeline] = None, *,
-        timing: Optional[str] = None) -> ArmReport:
+        timing: Optional[str] = None, trace=None,
+        profile: bool = False) -> ArmReport:
     """Simulate one arm through the staged pipeline.
 
     Args:
@@ -491,6 +520,15 @@ def run(arm: Arm, pipeline: Optional[Pipeline] = None, *,
             bank-idle windows) or ``"additive"`` (per-op overshoot and
             per-pulse serialization summed; the PR-2-compatible
             cross-validation baseline).
+        trace: flight-recorder opt-in — ``True`` allocates a fresh
+            ``repro.obs.SpanRecorder``, or pass your own; it records
+            typed spans (op/port/refresh/spill) and counter series as
+            the engine runs and lands on ``report.trace`` (export with
+            ``repro.obs.export_chrome_trace``, check with
+            ``repro.obs.reconcile``).  Pure observation: with or
+            without it, every report number is bit-identical.
+        profile: wall-clock each pipeline stage into
+            ``report.profile["stages"]`` (also observation-only).
 
     Returns:
         An :class:`~repro.sim.report.ArmReport` — latency/energy in
@@ -498,7 +536,12 @@ def run(arm: Arm, pipeline: Optional[Pipeline] = None, *,
         (timeline model) ``refresh_stall_s`` / ``refresh_hidden_j`` plus
         the ``.timeline`` makespan summary.
     """
-    report, _ = resolve_pipeline(timing, pipeline).run(arm)
+    recorder = trace
+    if trace is True:
+        from repro.obs.recorder import SpanRecorder
+        recorder = SpanRecorder()
+    report, _ = resolve_pipeline(timing, pipeline).run(
+        arm, recorder=recorder, profile=profile)
     return report
 
 
@@ -531,10 +574,10 @@ def _expand_grid(arms: Sequence[Arm], workloads, temps, freqs) -> list:
 
 
 def _sweep_one(job: tuple) -> ArmReport:
-    """Process-pool worker: simulate one (arm, timing, pipeline) job.
-    Top-level so it pickles by reference."""
-    arm, timing, pipeline = job
-    return run(arm, pipeline, timing=timing)
+    """Process-pool worker: simulate one (arm, timing, pipeline, profile)
+    job.  Top-level so it pickles by reference."""
+    arm, timing, pipeline, profile = job
+    return run(arm, pipeline, timing=timing, profile=profile)
 
 
 def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
@@ -542,7 +585,8 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
           workloads: Optional[Sequence] = None,
           temps: Optional[Sequence[float]] = None,
           freqs: Optional[Sequence] = None,
-          parallel=None) -> list:
+          parallel=None, profile: bool = False,
+          progress=None) -> list:
     """Simulate a grid of arms; one :class:`ArmReport` per grid point.
 
     Args:
@@ -562,6 +606,16 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
             the refresh-free verdict move across this axis.
         parallel: ``None``/``0``/``1`` → sequential; ``True`` → one
             worker per CPU; an int → that many process-pool workers.
+        profile: wall-clock each grid point's stages into its report's
+            ``profile`` field (aggregate across the grid with
+            ``repro.obs.aggregate_profiles``).
+        progress: per-completion visibility for long grids — ``True``
+            emits a ``repro.obs.log`` info line per finished point
+            (grid index, arm, elapsed seconds) to stderr regardless of
+            the ``REPRO_LOG`` threshold (you asked for it), or pass a
+            callable ``progress(i, arm_name, elapsed_s)``.  Completion
+            order, not grid order; the returned list stays in grid
+            order.
 
     Returns:
         Reports in deterministic grid order — ``arms`` outermost, then
@@ -571,9 +625,26 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
     """
     resolve_pipeline(timing, pipeline)      # validate eagerly
     grid = _expand_grid(arms, workloads, temps, freqs)
-    jobs = [(a, timing, pipeline) for a in grid]
+    jobs = [(a, timing, pipeline, profile) for a in grid]
+    if progress is True:
+        from repro.obs import log as _obslog
+        progress = (lambda i, name, dt:
+                    _obslog.log("info", "sweep_point", force=True,
+                                index=i, arm=name, elapsed_s=dt))
+    t0 = time.perf_counter()
     workers = (os.cpu_count() or 1) if parallel is True else int(parallel or 0)
     if workers > 1 and len(jobs) > 1:
         with ProcessPoolExecutor(max_workers=min(workers, len(jobs))) as ex:
-            return list(ex.map(_sweep_one, jobs))
-    return [_sweep_one(j) for j in jobs]
+            if progress is None:
+                return list(ex.map(_sweep_one, jobs))
+            futs = {ex.submit(_sweep_one, j): i for i, j in enumerate(jobs)}
+            for fut in as_completed(futs):
+                i = futs[fut]
+                progress(i, grid[i].name, time.perf_counter() - t0)
+            return [fut.result() for fut in futs]  # dicts keep insert order
+    out = []
+    for i, j in enumerate(jobs):
+        out.append(_sweep_one(j))
+        if progress is not None:
+            progress(i, grid[i].name, time.perf_counter() - t0)
+    return out

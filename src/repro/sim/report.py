@@ -69,6 +69,16 @@ class ArmReport:
     # the serialized form and excluded from equality
     controller: object = dataclasses.field(
         default=None, compare=False, repr=False)
+    # stage wall-clock profile from sim.run(profile=True):
+    # {"stages": {name: seconds}, "total_s": float}.  Machine-local
+    # measurement, so excluded from equality; serialized only when
+    # non-empty (records written without profiling keep their exact
+    # historical to_dict() shape)
+    profile: dict = dataclasses.field(default_factory=dict, compare=False)
+    # the live repro.obs.SpanRecorder from sim.run(trace=...); like
+    # controller, a python-side object outside the serialized form
+    trace: object = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     _SCALARS = ("arm", "reversible", "latency_s", "energy_j", "compute_j",
                 "memory_j", "scalar_memory_j", "oracle_rel_err", "stall_s",
@@ -79,14 +89,18 @@ class ArmReport:
                 "freq_hz", "pulse_exceeds_retention")
 
     def to_dict(self) -> dict:
-        """Plain-JSON form (drops the live ``controller`` object)."""
+        """Plain-JSON form (drops the live ``controller``/``trace``
+        objects; includes ``profile`` only when one was recorded)."""
         d = {k: getattr(self, k) for k in self._SCALARS}
         d["timeline"] = self.timeline
         d["config"] = self.config
         d["memory"] = self.memory
+        if self.profile:
+            d["profile"] = self.profile
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ArmReport":
-        known = {f.name for f in dataclasses.fields(cls)} - {"controller"}
+        known = {f.name for f in dataclasses.fields(cls)} - {"controller",
+                                                             "trace"}
         return cls(**{k: v for k, v in d.items() if k in known})

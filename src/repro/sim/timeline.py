@@ -41,14 +41,18 @@ than its retention interval can never hide — surfaced as
 """
 from __future__ import annotations
 
+import math
+
 from repro.memory import trace as mtr
 from repro.memory.banks import port_service_s
+from repro.memory.refresh import placement_interval
 from repro.sim.arm import Arm
 from repro.sim.pipeline import (DEFAULT_PIPELINE, SimContext,
                                 memory_config)
 
 
-def closed_loop_walk(core: mtr.ReplayCore, op_schedule) -> float:
+def closed_loop_walk(core: mtr.ReplayCore, op_schedule,
+                     recorder=None) -> float:
     """Walk ``op_schedule`` (``[(name, start_s, end_s), ...]`` in
     execution order) against the replay core's per-op bank-word tables;
     returns the makespan in seconds.
@@ -60,6 +64,13 @@ def closed_loop_walk(core: mtr.ReplayCore, op_schedule) -> float:
     they neither occupy ports nor advance time, matching the additive
     model's treatment.  Records per-bank busy intervals via
     ``BankState.occupy_port`` as a side effect.
+
+    ``recorder`` (a ``repro.obs.SpanRecorder``) additionally gets one
+    ``op`` span per executed op on the pushed-back timeline (with its
+    unconstrained schedule position and pushback in args) and one
+    ``port`` span per (op, bank) covering the slowest of the op's
+    read/write services there.  Observation only — the walk itself is
+    bit-identical with or without it.
     """
     banks = core.alloc.banks
     t = 0.0
@@ -69,7 +80,9 @@ def closed_loop_walk(core: mtr.ReplayCore, op_schedule) -> float:
             continue
         start = t
         end = start + dur
-        for table in (core.op_read_words, core.op_write_words):
+        ports = {} if recorder is not None else None
+        for table, io in ((core.op_read_words, "read_words"),
+                          (core.op_write_words, "write_words")):
             per = table.get(name)
             if not per:
                 continue
@@ -78,6 +91,22 @@ def closed_loop_walk(core: mtr.ReplayCore, op_schedule) -> float:
                 if busy > 0.0:
                     banks[b_idx].occupy_port(start, start + busy)
                     end = max(end, start + busy)
+                    if ports is not None:
+                        slot = ports.setdefault(
+                            b_idx, {"end": start,
+                                    "read_words": 0, "write_words": 0})
+                        slot["end"] = max(slot["end"], start + busy)
+                        slot[io] += words
+        if recorder is not None:
+            for b_idx in sorted(ports):
+                slot = ports[b_idx]
+                recorder.span("port", name, start, slot["end"],
+                              bank=b_idx,
+                              read_words=slot["read_words"],
+                              write_words=slot["write_words"])
+            recorder.span("op", name, start, end,
+                          sched_start_s=start0, sched_end_s=end0,
+                          pushback_s=end - (start + dur))
         t = end
     return t
 
@@ -86,8 +115,8 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
                     duration_s: float, refresh_policy: str = "selective",
                     alloc_policy: str = "pingpong", freq_hz: float = 500e6,
                     sample_scale: float = 1.0, refresh_guard: float = 1.0,
-                    retention_s=None,
-                    granularity: str = "bank") -> mtr.ControllerReport:
+                    retention_s=None, granularity: str = "bank",
+                    recorder=None) -> mtr.ControllerReport:
     """Replay ``events`` with the closed-loop timeline model.
 
     Same contract as :func:`repro.memory.trace.replay` (energies in J,
@@ -101,15 +130,23 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
     independently into the bank's idle gaps, so a near-full bank whose
     whole-bank pulse could never hide still hides refresh row by row
     (refresh energy is granularity-invariant; only stalls move).
+
+    ``recorder`` (a ``repro.obs.SpanRecorder``) captures the engine's
+    full event history — op/port spans from the walk, spill spans and
+    occupancy counters from the replay core, one ``refresh`` (hidden) or
+    ``refresh_stall`` (preempting) span per placed pulse, and per-bank
+    refresh-energy counters — plus the reconciliation metadata
+    ``repro.obs.reconcile`` needs.  Strictly observation: every number
+    in the returned report is bit-identical with or without a recorder.
     """
     core = mtr.replay_core(
         events, cfg, temp_c=temp_c, duration_s=duration_s,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
-        granularity=granularity)
+        granularity=granularity, recorder=recorder)
 
-    makespan = closed_loop_walk(core, op_schedule)
+    makespan = closed_loop_walk(core, op_schedule, recorder=recorder)
     makespan = max(makespan, duration_s)
     conflict_stall_s = makespan - duration_s
 
@@ -139,6 +176,29 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
         "port_busy_s": [b.busy_s for b in core.alloc.banks],
         "ops": sum(1 for _, s, e in op_schedule if e > s),
     }
+    if recorder is not None:
+        for b_idx in sorted(placements):
+            for p in placements[b_idx]:
+                t0, t1 = placement_interval(p, core.freq_hz)
+                recorder.span(
+                    "refresh" if p.hidden else "refresh_stall",
+                    f"pulse[{p.index}]", t0, t1, bank=b_idx,
+                    tick=p.index, row=p.row, rows=p.rows, words=p.words,
+                    stall_s=p.stall_s, deadline_s=p.deadline_s)
+        for d in decisions:
+            if d.refreshed:
+                recorder.counter("refresh_j", makespan, d.refresh_j,
+                                 bank=d.bank)
+        recorder.counter("refresh_total_j", makespan,
+                         sum(d.refresh_j for d in decisions))
+        recorder.meta.update(
+            timing="timeline", schedule_s=duration_s, makespan_s=makespan,
+            freq_hz=core.freq_hz, granularity=granularity, temp_c=temp_c,
+            refresh_policy=refresh_policy,
+            interval_s=(core.sched.interval_s
+                        if math.isfinite(core.sched.interval_s) else None),
+            retention_s=(core.sched.retention_s
+                         if math.isfinite(core.sched.retention_s) else None))
     return mtr.build_report(core, decisions,
                             conflict_stall_s=conflict_stall_s,
                             timing="timeline", timeline=summary)
@@ -157,7 +217,8 @@ def stage_timeline(arm: Arm, ctx: SimContext) -> None:
         temp_c=cfg.temp_c, duration_s=ctx.duration_s,
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
-        retention_s=retention, granularity=cfg.refresh_granularity)
+        retention_s=retention, granularity=cfg.refresh_granularity,
+        recorder=ctx.recorder)
 
 
 TIMELINE_PIPELINE = DEFAULT_PIPELINE.with_stage("memory", stage_timeline)

@@ -363,7 +363,7 @@ def test_sram_replay_reports_null_retention_and_strict_json():
 
 # ----------------------------------------------------- benchmark plumbing
 
-def test_fig24_freq_rows_surface_verdict_and_warnings():
+def test_fig24_freq_rows_surface_verdict_and_warnings(capsys):
     from benchmarks import fig24_tta_eta
     rows = fig24_tta_eta._freq_rows(None, None, [500e6, 125e6])
     tagged = [r for r in rows if isinstance(r, dict)]
@@ -371,16 +371,23 @@ def test_fig24_freq_rows_surface_verdict_and_warnings():
     base_fast, base_slow = tagged[0]["row"], tagged[1]["row"]
     assert "refresh_free=True" in base_fast
     assert "refresh_free=False" in base_slow
-    # the hot point at 125 MHz can never hide -> one-line warning row
-    assert any(isinstance(r, str) and "/WARN" in r
-               and "retention" in r for r in rows)
+    # the hot point at 125 MHz can never hide -> a structured stderr
+    # warning (repro.obs.log), never a stdout row
+    assert not any(isinstance(r, str) and "WARN" in r for r in rows)
+    err = capsys.readouterr().err
+    assert "[repro:warn] pulse_exceeds_retention" in err
+    assert "arm=DuDNN+CAMEL/T100" in err
 
 
-def test_bank_occupancy_hiding_row_carries_freq():
+def test_bank_occupancy_hiding_row_carries_freq(capsys):
     from benchmarks import bank_occupancy
     rows: list = []
     bank_occupancy._append_hiding(rows, freq_hz=250e6)
     assert rows[0]["freq_hz"] == 250e6
     assert "_warn" not in rows[0]
     assert "f250MHz" in rows[0]["row"]
-    assert len(rows) == 2 and "WARN" in rows[1]    # 250 MHz can't hide
+    assert len(rows) == 1                          # warning is not a row
+    # 250 MHz can't hide -> structured warning on stderr
+    err = capsys.readouterr().err
+    assert "[repro:warn] pulse_exceeds_retention" in err
+    assert "freq_mhz=250" in err

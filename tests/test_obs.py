@@ -1,0 +1,228 @@
+"""The flight-recorder stack (``repro.obs``): span-vs-report
+reconciliation, Chrome-trace export, the structured logger, and the
+stage profiler.
+
+The two contracts this file pins:
+
+- **Observation-only** — with tracing/profiling on, every ``ArmReport``
+  number is bit-identical to the untraced run (the recorder never feeds
+  back into timing or energy).
+- **Exact reconciliation** — ``reconcile`` re-derives the report's
+  stall/refresh scalars from the recorded spans with ``==`` equality
+  (the derivation replicates the engine's float summation grouping),
+  across every registry arm × granularity × temperature, and survives
+  the Chrome-trace JSON round-trip.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import obs, sim
+from repro.obs import log
+from repro.obs.export import recorder_from_trace, trace_dict
+from repro.obs.recorder import SpanRecorder
+
+ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL")
+TOOLS = Path(__file__).resolve().parent.parent / "tools"
+
+
+def _arm(name, gran, temp):
+    return sim.get_arm(name).with_system(temp_c=temp,
+                                         refresh_granularity=gran)
+
+
+# ------------------------------------------------- exact reconciliation
+
+@pytest.mark.parametrize("name", ARMS)
+@pytest.mark.parametrize("gran", ("bank", "row"))
+@pytest.mark.parametrize("temp", (60.0, 100.0))
+def test_reconcile_exact_across_grid(name, gran, temp):
+    rep = sim.run(_arm(name, gran, temp), trace=True)
+    res = obs.reconcile(rep.trace, rep)
+    assert res.ok, str(res)
+    # exact means ==, not approx: spot-check the derived dict too
+    derived = obs.derive(rep.trace)
+    assert derived["stall_s"] == rep.stall_s
+    assert derived["refresh_stall_s"] == rep.refresh_stall_s
+    assert derived["refresh_hidden_j"] == rep.refresh_hidden_j
+    assert derived["rows_refreshed"] == rep.rows_refreshed
+
+
+def test_reconcile_detects_tampering():
+    rep = sim.run(_arm("DuDNN+CAMEL", "bank", 100.0), trace=True)
+    rec = rep.trace
+    # drop a refresh span: the hidden-energy split must stop matching
+    victim = next(i for i, s in enumerate(rec.spans)
+                  if s.kind in ("refresh", "refresh_stall"))
+    rec.spans.pop(victim)
+    assert not obs.reconcile(rec, rep).ok
+
+
+def test_reconcile_requires_timeline_trace():
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL"), trace=True,
+                  timing="additive")
+    assert rep.trace.meta["timing"] == "additive"
+    with pytest.raises(ValueError, match="timeline"):
+        obs.reconcile(rep.trace, rep)
+
+
+def test_reconcile_roundtrips_through_chrome_trace(tmp_path):
+    rep = sim.run(_arm("DuDNN+CAMEL", "row", 100.0), trace=True)
+    path = tmp_path / "t.trace.json"
+    obs.export_chrome_trace(rep.trace, path, report=rep)
+    rec, report_dict = recorder_from_trace(json.loads(path.read_text()))
+    assert report_dict is not None
+    res = obs.reconcile(rec, report_dict)
+    assert res.ok, str(res)
+
+
+# ---------------------------------------------------- observation-only
+
+@pytest.mark.parametrize("name", ("DuDNN+CAMEL", "FR+SRAM"))
+def test_trace_and_profile_leave_report_bit_identical(name):
+    arm = _arm(name, "bank", 100.0)
+    plain = sim.run(arm)
+    traced = sim.run(arm, trace=True)
+    prof = sim.run(arm, profile=True)
+    assert plain.to_dict() == traced.to_dict()
+    d = prof.to_dict()
+    assert set(d) - set(plain.to_dict()) == {"profile"}
+    d.pop("profile")
+    assert plain.to_dict() == d
+    # dataclass equality ignores the compare=False observability fields
+    assert plain == traced == prof
+
+
+def test_profile_records_every_stage():
+    rep = sim.run(sim.get_arm("DuDNN+CAMEL"), profile=True)
+    stages = rep.profile["stages"]
+    assert tuple(stages) == sim.DEFAULT_PIPELINE.stage_names()
+    assert all(w >= 0.0 for w in stages.values())
+    assert rep.profile["total_s"] == sum(stages.values())
+    # profile survives the JSON round-trip; untraced reports omit the key
+    back = sim.ArmReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back.profile == rep.profile
+    assert "profile" not in sim.run(sim.get_arm("DuDNN+CAMEL")).to_dict()
+
+
+def test_aggregate_profiles():
+    reps = sim.sweep([sim.get_arm("DuDNN+CAMEL")],
+                     temps=[60.0, 100.0], profile=True)
+    agg = obs.aggregate_profiles(reps)
+    assert set(agg) == set(sim.DEFAULT_PIPELINE.stage_names())
+    mem = agg["memory"]
+    assert mem["total_s"] >= mem["max_s"] >= mem["mean_s"] > 0.0
+    # reports without profiles aggregate to nothing
+    assert obs.aggregate_profiles([sim.run(sim.get_arm("FR+SRAM"))]) == {}
+
+
+# -------------------------------------------------------- trace export
+
+def _chrome_events(rep):
+    return trace_dict(rep.trace, report=rep)["traceEvents"]
+
+
+def test_export_schema_and_sorted_ts():
+    rep = sim.run(_arm("DuDNN+CAMEL", "bank", 100.0), trace=True)
+    events = _chrome_events(rep)
+    body = [e for e in events if e["ph"] != "M"]
+    assert body and all(e["ph"] in ("X", "C", "i") for e in body)
+    ts = [e["ts"] for e in body]
+    assert ts == sorted(ts)
+    for e in body:
+        assert isinstance(e["pid"], int) and e["name"]
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+            assert e["args"]["t0_s"] <= e["args"]["t1_s"]
+    # one pid per bank + the array pid, each named via metadata
+    names = {(m["pid"], m["args"]["name"]) for m in events
+             if m["ph"] == "M" and m["name"] == "process_name"}
+    assert (0, "array") in names
+    assert any(n.startswith("bank ") for _, n in names)
+
+
+def test_engine_span_tracks_never_overlap():
+    """Op, port, and hidden-refresh tracks are non-overlapping by
+    construction of the timeline engine — per (bank, kind)."""
+    for gran in ("bank", "row"):
+        rep = sim.run(_arm("DuDNN+CAMEL", gran, 100.0), trace=True)
+        tracks: dict = {}
+        for s in rep.trace.spans:
+            if s.kind in ("op", "port", "refresh"):
+                tracks.setdefault((s.bank, s.kind), []).append(s)
+        assert tracks
+        for spans in tracks.values():
+            spans = sorted(spans, key=lambda s: (s.t0, s.t1))
+            for a, b in zip(spans, spans[1:]):
+                assert b.t0 >= a.t1, (gran, a, b)
+
+
+def test_check_trace_tool_passes_and_fails(tmp_path):
+    rep = sim.run(_arm("DuDNN+CAMEL", "bank", 100.0), trace=True)
+    good = tmp_path / "good.trace.json"
+    obs.export_chrome_trace(rep.trace, good, report=rep)
+    proc = subprocess.run(
+        [sys.executable, str(TOOLS / "check_trace.py"), str(good)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    # corrupt the embedded report: the tool must catch the mismatch
+    trace = json.loads(good.read_text())
+    trace["otherData"]["report"]["refresh_stall_s"] += 1.0
+    bad = tmp_path / "bad.trace.json"
+    bad.write_text(json.dumps(trace))
+    proc = subprocess.run(
+        [sys.executable, str(TOOLS / "check_trace.py"), str(bad)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "reconcile" in proc.stdout
+
+
+def test_recorder_rejects_unknown_kind():
+    rec = SpanRecorder()
+    with pytest.raises(ValueError, match="unknown span kind"):
+        rec.span("nonsense", "x", 0.0, 1.0)
+
+
+# ----------------------------------------------------- structured logs
+
+def test_log_threshold_env(capsys, monkeypatch):
+    monkeypatch.delenv(log.ENV_VAR, raising=False)
+    assert not log.info("hidden_event", a=1)       # default level: warn
+    assert log.warn("shown_event", x=1.5, s="two words")
+    err = capsys.readouterr().err
+    assert "hidden_event" not in err
+    assert '[repro:warn] shown_event x=1.5 s="two words"' in err
+
+    monkeypatch.setenv(log.ENV_VAR, "debug")
+    assert log.debug("now_visible")
+    monkeypatch.setenv(log.ENV_VAR, "error")
+    assert not log.warn("suppressed")
+    assert log.log("info", "forced_anyway", force=True)
+    monkeypatch.setenv(log.ENV_VAR, "bogus-level")
+    assert log.threshold() == log.LEVELS[log.DEFAULT_LEVEL]
+
+
+def test_sweep_progress_callback_and_log(capsys):
+    seen = []
+    reps = sim.sweep([sim.get_arm("DuDNN+CAMEL")], temps=[60.0, 100.0],
+                     progress=lambda i, name, dt: seen.append((i, name)))
+    assert len(reps) == 2
+    assert sorted(seen) == [(0, "DuDNN+CAMEL"), (1, "DuDNN+CAMEL")]
+    # progress=True emits forced stderr lines regardless of REPRO_LOG
+    sim.sweep([sim.get_arm("FR+SRAM")], temps=[60.0], progress=True)
+    err = capsys.readouterr().err
+    assert "[repro:info] sweep_point" in err and "arm=FR+SRAM" in err
+
+
+def test_sweep_parallel_progress_keeps_grid_order():
+    plain = sim.sweep([sim.get_arm(n) for n in ARMS])
+    seen = []
+    par = sim.sweep([sim.get_arm(n) for n in ARMS], parallel=2,
+                    progress=lambda i, name, dt: seen.append(i))
+    assert [r.arm for r in par] == [r.arm for r in plain] == list(ARMS)
+    assert sorted(seen) == [0, 1, 2, 3]
+    assert par == plain

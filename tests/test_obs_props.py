@@ -1,0 +1,75 @@
+"""Hypothesis property tests for the Chrome-trace exporter
+(optional-dep gated like ``tests/test_rows_props.py``): for *arbitrary*
+recorded content — any mix of span kinds, times, widths, and bank
+scopes —
+
+- the exported event list is ts-sorted with all metadata events first,
+- every duration event carries its raw second-domain ``t0_s``/``t1_s``
+  (with ``t0_s <= t1_s``) and every counter its ``t_s``/``value``,
+- the raw-seconds JSON round-trip (``recorder_from_trace``) reproduces
+  every span, counter, and the meta dict exactly (floats survive JSON
+  unchanged — the µs ``ts`` values are display-only).
+"""
+import json
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
+
+from repro.obs.export import recorder_from_trace, trace_dict
+from repro.obs.recorder import SpanRecorder
+
+_times = st.floats(min_value=0.0, max_value=1e-2, allow_nan=False)
+_spans = st.lists(
+    st.tuples(st.sampled_from(("op", "port", "refresh", "refresh_stall",
+                               "spill")),
+              _times, st.floats(min_value=0.0, max_value=1e-3),
+              st.integers(min_value=-1, max_value=4)),
+    max_size=40)
+_counters = st.lists(
+    st.tuples(_times, st.floats(min_value=0.0, max_value=1.0),
+              st.integers(min_value=-1, max_value=4)),
+    max_size=20)
+
+
+def _build(spans, counters) -> SpanRecorder:
+    rec = SpanRecorder()
+    for kind, t0, w, bank in spans:
+        t1 = t0 if kind == "spill" else t0 + w      # spills are instants
+        rec.span(kind, f"{kind}@{t0:g}", t0, t1, bank=bank,
+                 stall_s=w, rows=1)
+    for t, v, bank in counters:
+        rec.counter("c", t, v, bank=bank)
+    rec.meta.update(timing="synthetic", schedule_s=0.0)
+    return rec
+
+
+@settings(max_examples=60, deadline=None)
+@given(spans=_spans, counters=_counters)
+def test_export_sorted_and_lossless_for_any_recorder(spans, counters):
+    rec = _build(spans, counters)
+    trace = trace_dict(rec)
+    events = trace["traceEvents"]
+    first_body = next((i for i, e in enumerate(events)
+                       if e["ph"] != "M"), len(events))
+    assert all(e["ph"] == "M" for e in events[:first_body])
+    body = events[first_body:]
+    assert all(e["ph"] != "M" for e in body)
+    ts = [e["ts"] for e in body]
+    assert ts == sorted(ts)
+    for e in body:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+            assert e["args"]["t0_s"] <= e["args"]["t1_s"]
+        elif e["ph"] == "C":
+            assert "t_s" in e["args"] and "value" in e["args"]
+
+    back, report = recorder_from_trace(json.loads(json.dumps(trace)))
+    assert report is None
+    assert sorted((s.kind, s.t0, s.t1, s.bank) for s in back.spans) \
+        == sorted((s.kind, s.t0, s.t1, s.bank) for s in rec.spans)
+    assert sorted((c.t, c.value, c.bank) for c in back.counters) \
+        == sorted((c.t, c.value, c.bank) for c in rec.counters)
+    assert back.meta == rec.meta

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""CI gate for exported flight-recorder traces.
+
+Usage: check_trace.py TRACE_JSON [TRACE_JSON ...]
+
+Each input is a Chrome Trace Event file written by
+``repro.obs.export_chrome_trace`` (e.g. ``benchmarks.run --only fig24
+--trace DIR``).  Per file, asserts:
+
+1. **Schema** — the JSON object form (``traceEvents`` list +
+   ``displayTimeUnit``), every event a dict with ``ph``/``pid``/
+   ``name``, duration events with numeric ``ts``/``dur >= 0``, and
+   every span/counter carrying its raw second-domain values in ``args``
+   (``t0_s <= t1_s`` / ``t_s``).
+2. **Ordering** — non-metadata events sorted by ``ts``.
+3. **No overlap** — on every bank's port track and hidden-refresh track,
+   and on the array's op track, spans are pairwise disjoint (checked in
+   the exact second domain, not the rounded µs one).  The
+   ``refresh_stall`` track is exempt: preempting pulses serialize at
+   their deadline, so consecutive stalls legitimately stack there.
+4. **Reconciliation** — when the file embeds its report
+   (``otherData.report``), the rebuilt recorder re-derives ``stall_s`` /
+   ``refresh_stall_s`` / ``refresh_hidden_j`` / ``rows_refreshed`` and
+   they must match the report *exactly* (``repro.obs.reconcile``).
+
+Exit 0 when every file passes; prints one ``file: ok`` / failure line
+per input.
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.obs.export import recorder_from_trace  # noqa: E402
+from repro.obs.reconcile import reconcile  # noqa: E402
+
+# span tracks that must be pairwise disjoint (kind -> why)
+DISJOINT_KINDS = ("op", "port", "refresh")
+
+
+def check_schema(trace: dict) -> list:
+    errs = []
+    if not isinstance(trace.get("traceEvents"), list):
+        return ["traceEvents missing or not a list"]
+    if "displayTimeUnit" not in trace:
+        errs.append("displayTimeUnit missing")
+    last_ts = None
+    for i, e in enumerate(trace["traceEvents"]):
+        where = f"event[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        for key in ("ph", "pid", "name"):
+            if key not in e:
+                errs.append(f"{where}: missing {key!r}")
+        ph = e.get("ph")
+        if ph == "M":
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            errs.append(f"{where}: non-numeric ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errs.append(f"{where}: ts {ts} < previous {last_ts} "
+                        f"(events not sorted)")
+        last_ts = ts
+        args = e.get("args", {})
+        if ph == "X":
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                errs.append(f"{where}: X event needs dur >= 0")
+            if not ("t0_s" in args and "t1_s" in args
+                    and args["t0_s"] <= args["t1_s"]):
+                errs.append(f"{where}: raw args t0_s <= t1_s missing")
+        elif ph == "C":
+            if "t_s" not in args or "value" not in args:
+                errs.append(f"{where}: C event needs args t_s/value")
+    return errs
+
+
+def check_overlap(recorder) -> list:
+    """Pairwise-disjoint spans per (bank, kind) track, in seconds."""
+    errs = []
+    tracks: dict = {}
+    for s in recorder.spans:
+        if s.kind in DISJOINT_KINDS:
+            tracks.setdefault((s.bank, s.kind), []).append(s)
+    for (bank, kind), spans in sorted(tracks.items()):
+        spans = sorted(spans, key=lambda s: (s.t0, s.t1))
+        for a, b in zip(spans, spans[1:]):
+            if b.t0 < a.t1:
+                errs.append(
+                    f"overlap on bank={bank} track={kind}: "
+                    f"[{a.t0:g},{a.t1:g}) {a.name!r} vs "
+                    f"[{b.t0:g},{b.t1:g}) {b.name!r}")
+                break                      # one per track is enough signal
+    return errs
+
+
+def check_file(path: str) -> list:
+    with open(path) as f:
+        trace = json.load(f)
+    errs = check_schema(trace)
+    if errs:
+        return errs
+    recorder, report = recorder_from_trace(trace)
+    errs += check_overlap(recorder)
+    if report is None:
+        errs.append("otherData.report missing (nothing to reconcile)")
+    elif recorder.meta.get("timing") == "timeline":
+        res = reconcile(recorder, report)
+        if not res.ok:
+            errs += [f"reconcile: {c.field} report={c.reported!r} "
+                     f"derived={c.derived!r}" for c in res.failures()]
+    return errs
+
+
+def main(paths) -> int:
+    if not paths:
+        print("usage: check_trace.py TRACE_JSON [TRACE_JSON ...]")
+        return 2
+    bad = 0
+    for path in paths:
+        errs = check_file(path)
+        if errs:
+            bad += 1
+            print(f"{path}: FAIL")
+            for e in errs[:10]:
+                print(f"  {e}")
+        else:
+            print(f"{path}: ok")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
