@@ -44,7 +44,7 @@ import traceback
 
 from benchmarks import (bank_occupancy, bfp_fidelity, fig21_ablations,
                         fig22_retention, fig23_lifetime, fig24_tta_eta,
-                        replay_throughput, table2_accuracy,
+                        replay_throughput, serve_sweep, table2_accuracy,
                         table3_arraysize)
 
 SUITES = {
@@ -57,6 +57,7 @@ SUITES = {
     "bfp": bfp_fidelity.run,            # §III-E fidelity + kernel timing
     "bank_occupancy": bank_occupancy.run,   # repro.memory controller
     "replay": replay_throughput.run,    # timeline-engine ops/sec
+    "serve_sweep": serve_sweep.run,     # KV-policy serving tradeoff
 }
 SLOW = {"table2", "fig21", "bfp"}       # these train models on CPU
 

@@ -1,0 +1,196 @@
+"""Serving sweep: the Kelle-style KV-policy tradeoff, as CSV rows.
+
+Sweeps the ``repro.serve`` arm family (``Serve/always`` ``Serve/skip``
+``Serve/evict`` ``Serve/recompute`` — docs/serving.md) over an arrival-
+rate axis and a temperature axis, so the two crossovers the subsystem
+exists to show are plotted-as-CSV:
+
+- **rate axis** (default-temperature rows): at low arrival rates
+  sessions barely overlap, per-session decode gaps stay under the eDRAM
+  retention floor and every policy costs about the same; as the rate
+  climbs the continuous batch saturates, gaps stretch past retention,
+  and ``evict``/``recompute`` diverge (evict drops context cheaply,
+  recompute buys it back with MACs).
+- **temperature axis** (``crossover`` rows): at 60 °C a single-session
+  cache is re-read within retention, so ``skip`` (read-triggered
+  restore, no pulses) beats ``always``; at 100 °C retention is shorter
+  than the decode gap, ``skip`` degenerates into refresh *plus* restore
+  overhead and ``always`` wins.
+
+Rows: ``serve_sweep/<policy>@r<rate>,us_per_token,tokens_per_s=...``
+plus one ``serve_sweep/crossover/T<temp>`` row per temperature naming
+the measured winner.  ``run(trace_dir=...)`` (``--trace DIR``) captures
+one flight-recorder run of ``Serve/skip``, reconciles it span-vs-report
+(exact equality), and writes ``Serve_skip.trace.json`` for Perfetto /
+``tools/check_trace.py``.
+
+The committed record lives in ``BENCH_serve.json`` (repo root);
+re-measure and append with::
+
+    PYTHONPATH=src python -m benchmarks.serve_sweep --update
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro import obs, sim
+from repro.obs import log
+from repro.serve import KV_POLICIES
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_serve.json"
+
+# arrival-rate axis (requests/s): sequential → default → saturated batch
+RATES = (2.0e3, 2.0e4, 1.0e5)
+# temperature-crossover axis (°C): retention 6.64 µs → 3.4 µs
+CROSSOVER_TEMPS = (60.0, 100.0)
+
+
+def _arms(rates=RATES):
+    """The sweep grid as concrete arms, policy-major then rate."""
+    return [sim.get_arm(f"Serve/{p}").with_traffic(arrival_per_s=r)
+            for p in KV_POLICIES for r in rates]
+
+
+def _policy_rows(timing, parallel, rates=RATES) -> list:
+    arms = _arms(rates)
+    flat = sim.sweep(arms, timing=timing, parallel=parallel)
+    rows: list = []
+    for arm, rep in zip(arms, flat):
+        s = rep.serving
+        us_per_token = 1e6 / s["tokens_per_s"] if s["tokens_per_s"] else 0.0
+        tag = f"serve_sweep/{s['policy']}@r{s['arrival_per_s']:g}"
+        rows.append({
+            "row": (f"{tag},{us_per_token:.2f},"
+                    f"tokens_per_s={s['tokens_per_s']:.0f};"
+                    f"j_per_token={s['j_per_token']:.4e};"
+                    f"energy_j={rep.energy_j:.4e};"
+                    f"latency_p95_us={s['latency_p95_s']*1e6:.1f};"
+                    f"evicted={s['kv_entries_evicted']};"
+                    f"recomputed={s['kv_entries_recomputed']};"
+                    f"reads_dropped={s['reads_dropped']};"
+                    f"refresh_free={rep.refresh_free}"),
+            "arm": rep.arm,
+            "policy": s["policy"],
+            "arrival_per_s": s["arrival_per_s"],
+            "tokens_per_s": s["tokens_per_s"],
+            "j_per_token": s["j_per_token"],
+            "config": rep.config,
+        })
+    return rows
+
+
+def _crossover_rows(timing, parallel) -> list:
+    """always-vs-skip at each temperature, single-session traffic
+    (``max_batch=1``, slow arrivals) so the decode gap — not batching —
+    decides whether reads land inside retention."""
+    arms = [sim.get_arm(f"Serve/{p}")
+            .with_traffic(max_batch=1, arrival_per_s=2.0e3)
+            for p in ("always", "skip")]
+    flat = sim.sweep(arms, timing=timing, temps=list(CROSSOVER_TEMPS),
+                     parallel=parallel)
+    rows: list = []
+    for j, temp in enumerate(CROSSOVER_TEMPS):
+        rep = {arms[i].kv_policy: flat[i * len(CROSSOVER_TEMPS) + j]
+               for i in range(len(arms))}
+        winner = min(rep, key=lambda p: rep[p].energy_j)
+        rows.append({
+            "row": (f"serve_sweep/crossover/T{temp:g},0,"
+                    f"winner={winner};"
+                    f"always_j={rep['always'].energy_j:.4e};"
+                    f"skip_j={rep['skip'].energy_j:.4e};"
+                    f"skip_refresh_free={rep['skip'].refresh_free}"),
+            "temp_c": temp,
+            "winner": winner,
+        })
+    return rows
+
+
+def _trace_rows(trace_dir) -> list:
+    """One reconciled flight-recorder capture of the ``Serve/skip`` arm
+    (timeline model — reconciliation is defined against its spans)."""
+    out = pathlib.Path(trace_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    arm = sim.get_arm("Serve/skip")
+    rep = sim.run(arm, trace=True, timing="timeline")
+    res = obs.reconcile(rep.trace, rep)
+    path = out / (arm.name.replace("/", "_") + ".trace.json")
+    obs.export_chrome_trace(rep.trace, path, report=rep)
+    if not res.ok:
+        log.error("trace_reconcile_mismatch", arm=arm.name,
+                  detail=str(res))
+    return [{
+        "row": (f"serve_sweep/trace/{arm.name},0,"
+                f"file={path.name};spans={len(rep.trace.spans)};"
+                f"reconciled={res.ok}"),
+        "arm": arm.name,
+        "trace_file": str(path),
+        "reconciled": res.ok,
+    }]
+
+
+def run(timing=None, parallel=None, trace_dir=None) -> list:
+    rows = _policy_rows(timing, parallel)
+    rows += _crossover_rows(timing, parallel)
+    if trace_dir is not None:
+        rows += _trace_rows(trace_dir)
+    rows.append("serve_sweep/claim,0,paper=refresh-skipping wins while "
+                "reads outpace retention; evict/recompute split past it")
+    return rows
+
+
+def measurements() -> list:
+    """Per-policy headline numbers at the default traffic (the committed
+    trajectory record: tokens/s and J/token per KV policy)."""
+    out = []
+    for policy in KV_POLICIES:
+        rep = sim.run(sim.get_arm(f"Serve/{policy}"))
+        s = rep.serving
+        out.append({
+            "policy": policy,
+            "tokens_per_s": s["tokens_per_s"],
+            "j_per_token": s["j_per_token"],
+            "energy_j": rep.energy_j,
+            "latency_s": rep.latency_s,
+            "kv_entries_evicted": s["kv_entries_evicted"],
+            "kv_entries_recomputed": s["kv_entries_recomputed"],
+        })
+    return out
+
+
+def update_bench(path=BENCH_PATH) -> dict:
+    """Append today's measurement to the committed trajectory file."""
+    path = pathlib.Path(path)
+    arm = sim.get_arm("Serve/always")
+    data = (json.loads(path.read_text()) if path.exists()
+            else {"benchmark": "serve_sweep",
+                  "workload": {
+                      "model": {"n_layers": arm.model.n_layers,
+                                "d_model": arm.model.d_model,
+                                "d_kv": arm.model.d_kv},
+                      "traffic": {"seed": arm.traffic.seed,
+                                  "n_requests": arm.traffic.n_requests,
+                                  "arrival_per_s": arm.traffic.arrival_per_s,
+                                  "max_batch": arm.traffic.max_batch},
+                  },
+                  "records": []})
+    record = {"date": time.strftime("%Y-%m-%d"),
+              "measurements": measurements()}
+    data["records"].append(record)
+    path.write_text(json.dumps(data, indent=1) + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help=f"append a record to {BENCH_PATH.name}")
+    args = ap.parse_args()
+    if args.update:
+        rec = update_bench()
+        print(f"appended {rec['date']} record to {BENCH_PATH}")
+    for r in run():
+        print(r["row"] if isinstance(r, dict) else r)

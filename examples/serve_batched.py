@@ -1,66 +1,67 @@
-"""Batched serving: prefill a batch of prompts, then greedy-decode
-continuations with per-layer KV caches / recurrent states.
+"""Batched serving on the eDRAM KV-cache simulator (``repro.serve``).
 
-    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-780m
+Runs one serving arm end-to-end under seeded production-style traffic —
+continuous batching, per-token KV-cache tensors living in the eDRAM
+banks, the chosen KV policy deciding what happens when an entry's age
+crosses the retention floor — and prints the ArmReport's serving
+summary.  Optionally exports the flight-recorder trace (op/port/refresh
+spans on the closed-loop timeline) as Chrome Trace Event JSON for
+Perfetto, after reconciling it exactly against the report.
+
+    PYTHONPATH=src python examples/serve_batched.py --policy skip \
+        --rate 2e4 --batch 4 --trace serve.trace.json
+
+See docs/serving.md for the policy semantics and the crossover story.
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.models import layers as L, registry
-from repro.train import serve_step as ss
-
-POLICY = L.Policy(compute_dtype=jnp.float32)
+from repro import obs, sim
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="recurrentgemma-9b",
-                    choices=sorted(registry.ARCHS))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--policy", default="skip",
+                    choices=["always", "skip", "evict", "recompute"])
+    ap.add_argument("--rate", type=float, default=2e4,
+                    help="arrival rate, requests/s")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="continuous-batching slots")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--temp", type=float, default=60.0,
+                    help="die temperature, °C (sets eDRAM retention)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a reconciled Chrome/Perfetto trace")
     args = ap.parse_args()
 
-    entry = registry.get(args.arch)
-    cfg = entry.smoke                      # CPU-sized; entry.full on hardware
-    params = entry.module.init_params(jax.random.PRNGKey(0), cfg)
+    arm = (sim.get_arm(f"Serve/{args.policy}")
+           .with_traffic(arrival_per_s=args.rate, max_batch=args.batch,
+                         n_requests=args.requests, seed=args.seed)
+           .with_system(temp_c=args.temp))
+    rep = sim.run(arm, trace=args.trace is not None)
 
-    fe_shapes = entry.frontend_shape(cfg, args.batch)
-    frontend = None if fe_shapes is None else {
-        k: jax.random.normal(jax.random.PRNGKey(9), v) * 0.1
-        for k, v in fe_shapes.items()}
+    s = rep.serving
+    print(f"{arm.name} @ {args.rate:g} req/s, batch {args.batch}, "
+          f"{args.temp:g}°C")
+    print(f"  completed {s['requests_completed']}/{s['requests']} requests"
+          f" ({s['requests_preempted']} preempted), "
+          f"{s['tokens_served']} tokens decoded "
+          f"(+{s['prefill_tokens']} prefilled)")
+    print(f"  {s['tokens_per_s']:.0f} tok/s, {s['j_per_token']:.3e} J/tok, "
+          f"latency p50/p95 = {s['latency_p50_s']*1e6:.1f}/"
+          f"{s['latency_p95_s']*1e6:.1f} µs")
+    print(f"  kv: {s['kv_entries_evicted']} evicted, "
+          f"{s['kv_entries_recomputed']} recomputed, "
+          f"{s['reads_dropped']} reads dropped, "
+          f"restore_j={s['restore_j']:.3e}")
+    print(f"  memory_j={rep.memory_j:.3e} stall_us={rep.stall_s*1e6:.2f} "
+          f"refresh_free={rep.refresh_free}")
 
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
-    max_len = args.prompt_len + args.gen + 8
-
-    prefill = ss.make_prefill_step(entry, cfg, max_len=max_len, policy=POLICY,
-                                   cache_dtype=jnp.float32,
-                                   logits_mode="last")
-    decode = jax.jit(ss.make_decode_step(entry, cfg, policy=POLICY))
-
-    t0 = time.time()
-    out = prefill(params, prompts, frontend) if frontend else \
-        prefill(params, prompts)
-    cache = out["cache"]
-    tok = jnp.argmax(out["next_token_logits"], -1)[:, None].astype(jnp.int32)
-    print(f"prefill[{args.batch}×{args.prompt_len}] "
-          f"({args.arch} smoke): {time.time()-t0:.2f}s")
-
-    seqs = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        tok, cache = decode(params, cache, tok)
-        seqs.append(tok)
-    gen = jnp.concatenate(seqs, axis=1)
-    dt = time.time() - t0
-    print(f"decoded {args.gen-1} steps in {dt:.2f}s "
-          f"({(args.gen-1)*args.batch/dt:.1f} tok/s)")
-    for b in range(args.batch):
-        print(f"  seq{b}: {[int(t) for t in gen[b]]}")
+    if args.trace:
+        res = obs.reconcile(rep.trace, rep)
+        obs.export_chrome_trace(rep.trace, args.trace, report=rep)
+        print(f"  trace: {args.trace} ({len(rep.trace.spans)} spans, "
+              f"reconciled={res.ok})")
 
 
 if __name__ == "__main__":

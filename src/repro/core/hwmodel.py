@@ -77,6 +77,14 @@ class SystemConfig:
     # operating points pay for the time they stretch over, so the
     # energy-optimal point becomes interior instead of the slowest clock.
     charge_leakage: bool = False
+    # read-triggered restore (Kelle-style refresh skipping, the
+    # ``repro.serve`` KV-policy substrate): every on-chip read pays the
+    # refresh restore phase (write-back of the destructively sensed
+    # value) and resets the touched rows' decay clocks, so under the
+    # ``selective`` policy a bank whose entries are re-read within
+    # retention never needs a refresh pulse.  Off for the training arms
+    # (their golden pins predate it).
+    reads_restore: bool = False
     # bank count the controller splits ``onchip_bits`` into when
     # ``use_edram=False`` (the paper's 4×48KB activation SRAMs)
     sram_banks: int = 4

@@ -23,7 +23,7 @@ import networkx as nx
 
 from repro.core.lifetime import DuBlockSpec, OpSpec
 
-EVENT_KINDS = ("alloc", "write", "read", "free")
+EVENT_KINDS = ("alloc", "write", "read", "free", "evict")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +33,12 @@ class TraceEvent:
 
     ``alloc`` marks data live at iteration start (no write energy);
     ``write``/``read`` carry the op's traffic; ``free`` is the overwrite
-    point — the last reader has run and the words are dead.
+    point — the last reader has run and the words are dead.  ``evict``
+    is a policy-driven drop (a KV entry past its retention deadline, a
+    serving session preempted): like ``free`` it releases the words, but
+    the allocator records the tensor as evicted — the data was dropped
+    *before* its last reader, not after (``repro.serve`` counts these as
+    its accuracy proxy).
 
     ``buffered`` marks whole-iteration activation buffers (the
     irreversible/FR arm's forward stash): the controller places them at
@@ -285,6 +290,36 @@ def irreversible_training_ops(
         ]
     buffered = frozenset(f"sv{i}_{l}" for i in (1, 2) for l in range(L))
     return ops, buffered
+
+
+# ------------------------------------------------------- serving builders
+
+def prefill_op(name: str, macs: float, kv_writes: Sequence[str],
+               rate: float = 0.0) -> Op:
+    """One serving *prefill* op: process a request's whole prompt and
+    append one KV entry per (layer, position) — ``kv_writes`` — at the
+    op's end.  Prefill reads no cache (the prompt streams through the
+    array); its MAC work covers the projections plus causal attention
+    over the growing prefix.  Used by the ``repro.serve`` decode-trace
+    generator."""
+    return Op(name, work=OpWork(macs=macs), reads=(),
+              writes=tuple(kv_writes), rate=rate)
+
+
+def decode_op(name: str, macs: float, kv_reads: Sequence[str],
+              kv_writes: Sequence[str], rate: float = 0.0) -> Op:
+    """One serving *decode* op: generate one token for one session.
+
+    ``kv_reads`` is the session's live cache — every entry written at an
+    earlier position is re-read here (token-position-dependent lifetime:
+    an entry lives from its write until session end, touched every
+    step), so attention port traffic grows with cache length.
+    ``kv_writes`` is the new position's entry per layer, landing at the
+    op's end.  MAC work = per-token projections + attention over the
+    live cache (+ any recompute of expired entries the KV policy
+    schedules onto this op)."""
+    return Op(name, work=OpWork(macs=macs), reads=tuple(kv_reads),
+              writes=tuple(kv_writes), rate=rate)
 
 
 def dependency_graph(ops: Sequence[Op]) -> nx.DiGraph:

@@ -59,6 +59,7 @@ class Allocator:
         self.placements: dict[str, Placement] = {}
         self.spill_bits = 0.0
         self.spilled: list[str] = []
+        self.evicted: list[str] = []
         self._next_bank = 0
 
     # -- policy: bank visit order ----------------------------------------
@@ -204,6 +205,26 @@ class Allocator:
             return
         for i, _ in p.spans:
             self.banks[i].free(tensor, now)
+
+    def touch(self, tensor: str, now: float) -> None:
+        """Read-triggered restore over every bank the tensor stripes
+        across (see :meth:`BankState.touch`); off-chip or unknown tensors
+        are a no-op — there is nothing decaying to restore."""
+        p = self.placements.get(tensor)
+        if p is None:
+            return
+        for i, _ in p.spans:
+            self.banks[i].touch(tensor, now)
+
+    def evict(self, tensor: str, now: float) -> None:
+        """Policy-driven drop: release the tensor's words like
+        :meth:`free`, but record it in ``evicted`` — the data was dropped
+        *before* its last reader (a KV entry past its retention deadline,
+        a preempted serving session), which ``repro.serve`` counts as its
+        accuracy proxy."""
+        if tensor in self.placements:
+            self.evicted.append(tensor)
+        self.free(tensor, now)
 
     # -- introspection ---------------------------------------------------
     def location(self, tensor: str) -> Optional[Placement]:

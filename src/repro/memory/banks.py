@@ -229,6 +229,16 @@ class BankState:
                                   (now - r.write_t) * r.scale)
         r.write_t = now
 
+    def touch(self, tensor: str, now: float) -> None:
+        """Read-triggered restore (Kelle-style refresh skipping): an eDRAM
+        read is destructive, so a read that writes the sensed value back
+        resets the cell's decay clock exactly like a refresh pulse would.
+        Residency bookkeeping is identical to :meth:`rewrite` — the bank's
+        ``max_resident_s`` then measures the longest *inter-touch* gap, so
+        the ``selective`` refresh policy only fires when some entry's next
+        read misses the retention deadline."""
+        self.rewrite(tensor, now)
+
     def free(self, tensor: str, now: float) -> float:
         """Release ``tensor``; returns its scaled residency duration."""
         r = self.resident.pop(tensor)

@@ -93,6 +93,12 @@ class ControllerReport:
     spill_bits: float              # capacity-overflow bits (per-sample)
     offchip_bits: float            # traffic to/from spilled tensors
     spilled_tensors: tuple
+    # read-triggered restore (reads_restore=True, repro.serve KV
+    # policies): the write-back share of each on-chip read, already
+    # *included* in read_j — informational split, like refresh_read_j.
+    restore_j: float = 0.0
+    # tensors dropped by ``evict`` events before their last reader
+    evicted_tensors: tuple = ()
     refresh_read_j: float = 0.0    # refresh sense phase (sums to refresh_j
     refresh_restore_j: float = 0.0  # with the restore/write-back phase)
     # the wall-clock retention floor / refresh interval the scheduler ran
@@ -162,6 +168,7 @@ class ReplayCore:
     offchip_bits: float
     op_read_words: dict            # op name -> {bank index: words}
     op_write_words: dict
+    restore_j: float = 0.0         # read-triggered restore share of read_j
 
 
 def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
@@ -173,6 +180,7 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 refresh_guard: float = 1.0,
                 retention_s: Optional[float] = None,
                 granularity: str = "bank",
+                reads_restore: bool = False,
                 recorder=None) -> ReplayCore:
     """Walk ``events`` through allocator placement and traffic-energy
     accounting; returns the :class:`ReplayCore` a stall model finishes.
@@ -186,6 +194,17 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     SRAM tier that never refreshes.  ``granularity`` sets the refresh
     pulse unit (``"bank"`` | ``"row"`` — see
     :class:`~repro.memory.refresh.RefreshScheduler`).
+
+    ``reads_restore=True`` models Kelle-style read-triggered restore
+    (the substrate of the ``repro.serve`` KV policies): an eDRAM read is
+    destructive, so writing the sensed value back costs the refresh
+    restore phase (``cfg.refresh_restore_pj`` per bit, charged into
+    ``read_j`` and split out as ``restore_j``) and resets the row's
+    decay clock (:meth:`Allocator.touch`) — a bank whose every entry is
+    re-read within retention then never needs a refresh pulse under the
+    ``selective`` policy.  ``evict`` events release words like ``free``
+    but record the tensor in ``evicted_tensors`` (dropped before its
+    last reader).
 
     ``recorder`` is an optional :class:`repro.obs.SpanRecorder`: the
     walk then samples per-bank occupancy counters at every
@@ -218,7 +237,7 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     for ev in events:
         if ev.kind in ("alloc", "write"):
             first_seen.setdefault(ev.tensor, ev.time)
-        elif ev.kind == "free" and ev.tensor in first_seen:
+        elif ev.kind in ("free", "evict") and ev.tensor in first_seen:
             w = ev.time - first_seen.pop(ev.tensor)
             window[ev.tensor] = max(window.get(ev.tensor, 0.0), w)
     for t, t0 in first_seen.items():     # never freed ⇒ lives to trace end
@@ -239,10 +258,10 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 live_w[ev.tensor] = w
                 cur_w += w
                 transient_peak_w = max(transient_peak_w, cur_w)
-        elif ev.kind == "free":
+        elif ev.kind in ("free", "evict"):
             cur_w -= live_w.pop(ev.tensor, 0)
 
-    read_j = write_j = offchip_j = 0.0
+    read_j = write_j = offchip_j = restore_j = 0.0
     transient_now_w = 0               # on-chip streamed words right now
     offchip_bits = 0.0
     # per-op, per-bank words touched (the conflict model's unit)
@@ -303,7 +322,16 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                     recorder.span("spill", ev.tensor, ev.time, ev.time,
                                   op=ev.op, io="read", bits=ev.bits)
             else:
-                read_j += ev.bits * cfg.read_pj_per_bit * 1e-12
+                pj = cfg.read_pj_per_bit
+                if reads_restore:
+                    # destructive read + write-back: the restore phase of
+                    # a refresh pulse rides every read, and the row's
+                    # decay clock restarts (touch) — this is what lets
+                    # ``selective`` skip refreshing well-read banks.
+                    pj += cfg.refresh_restore_pj
+                    restore_j += ev.bits * cfg.refresh_restore_pj * 1e-12
+                    alloc.touch(ev.tensor, ev.time)
+                read_j += ev.bits * pj * 1e-12
                 for b_idx, _ in p.spans:
                     alloc.banks[b_idx].read_bits += \
                         ev.bits / max(1, len(p.spans))
@@ -311,11 +339,14 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             if recorder is not None:
                 recorder.counter("traffic_j", ev.time,
                                  read_j + write_j + offchip_j)
-        elif ev.kind == "free":
+        elif ev.kind in ("free", "evict"):
             p = alloc.location(ev.tensor)
             if not ev.buffered and p is not None and not p.offchip:
                 transient_now_w -= sum(sw for _, sw in p.spans)
-            alloc.free(ev.tensor, ev.time)
+            if ev.kind == "evict":
+                alloc.evict(ev.tensor, ev.time)
+            else:
+                alloc.free(ev.tensor, ev.time)
 
     for b in alloc.banks:
         b.finalize(duration_s)
@@ -326,7 +357,8 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         temp_c=temp_c, duration_s=duration_s, freq_hz=freq_hz,
         read_j=read_j, write_j=write_j, offchip_j=offchip_j,
         offchip_bits=offchip_bits,
-        op_read_words=op_read_words, op_write_words=op_write_words)
+        op_read_words=op_read_words, op_write_words=op_write_words,
+        restore_j=restore_j)
 
 
 def build_report(core: ReplayCore, decisions: Sequence, *,
@@ -367,6 +399,8 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
         stall_s=conflict_stall_s + refresh_stall,
         spill_bits=core.alloc.spill_bits, offchip_bits=core.offchip_bits,
         spilled_tensors=tuple(core.alloc.spilled),
+        restore_j=core.restore_j,
+        evicted_tensors=tuple(core.alloc.evicted),
         refresh_read_j=refresh_read_j,
         refresh_restore_j=refresh_restore_j,
         retention_s=core.sched.retention_s,
@@ -390,6 +424,7 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
            refresh_guard: float = 1.0,
            retention_s: Optional[float] = None,
            granularity: str = "bank",
+           reads_restore: bool = False,
            recorder=None) -> ControllerReport:
     """Replay ``events`` through the bank-level controller with the
     **additive** stall model (the cross-validation baseline; the
@@ -419,6 +454,10 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             row pulses serialize to the same port time as the bank
             pulse); only the ``pulse_exceeds_retention`` flag and the
             row counters move.
+        reads_restore: charge the refresh restore phase on every on-chip
+            read and reset the touched rows' decay clocks (see
+            :func:`replay_core` — the ``repro.serve`` KV-policy
+            substrate).
         recorder: optional ``repro.obs.SpanRecorder`` — records the
             replay-core observables (occupancy counters, spill spans);
             the additive model places no pulses, so the trace carries no
@@ -434,7 +473,8 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
-        granularity=granularity, recorder=recorder)
+        granularity=granularity, reads_restore=reads_restore,
+        recorder=recorder)
     if recorder is not None:
         recorder.meta.update(timing="additive", schedule_s=duration_s,
                              granularity=granularity, temp_c=temp_c,

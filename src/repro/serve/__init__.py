@@ -1,0 +1,54 @@
+"""``repro.serve`` — eDRAM KV-cache serving simulation under traffic.
+
+CAMEL's training story holds because activations are *transient*: a
+value's producer→consumer window sits under the eDRAM retention floor,
+so the branch trains refresh-free.  Serving inverts that — a KV-cache
+entry is written once and re-read on **every** subsequent decode step of
+its session, so its lifetime is the session's, orders of magnitude past
+retention.  Kelle (arXiv 2510.16040) co-designs exactly this regime:
+refresh the cache, skip refreshes that a read just performed, or drop /
+re-derive entries instead of refreshing.  This package models those
+policies on CAMEL's memory substrate, end to end under production-style
+traffic::
+
+    from repro import sim
+
+    rep = sim.run(sim.get_arm("Serve/skip"))     # timeline model, eDRAM
+    rep.serving["tokens_per_s"], rep.serving["j_per_token"]
+
+Layers (each importable on its own):
+
+``repro.serve.model``
+    :class:`ServeModel` — the decoder LM as the memory system sees it:
+    MACs per token, KV values per cache entry.
+``repro.serve.traffic``
+    :class:`TrafficSpec` / :func:`requests` — deterministic seeded
+    Poisson arrivals + request mix + continuous-batching limits.
+``repro.serve.engine``
+    :func:`lower_traffic` — the decode-trace generator: traffic → one
+    interleaved op schedule + per-tensor event stream, with the KV
+    policy (:data:`KV_POLICIES`) applied inline.
+``repro.serve.pipeline``
+    :class:`ServeArm` + the serving pipelines — serving-specific
+    schedule/cost/trace/energy stages around the **unchanged** memory
+    stage, so bank/refresh/DVFS modeling, ``granularity="row"``, the
+    flight recorder, and ``repro.obs.reconcile`` all apply verbatim.
+
+Importing this package registers the serving arm family
+(``Serve/always`` ``Serve/skip`` ``Serve/evict`` ``Serve/recompute``)
+next to the Fig-24 training arms; ``repro.sim`` imports it, so
+``sim.get_arm("Serve/...")`` always works.  See ``docs/serving.md``.
+"""
+from repro.serve.engine import (KV_POLICIES, ServeStats, ServeTrace,
+                                lower_traffic)
+from repro.serve.model import ServeModel
+from repro.serve.pipeline import (POLICY_SYSTEM, SERVE_ADDITIVE_PIPELINE,
+                                  SERVE_TIMELINE_PIPELINE, ServeArm,
+                                  serve_arm)
+from repro.serve.traffic import Request, TrafficSpec, requests
+
+__all__ = [
+    "KV_POLICIES", "POLICY_SYSTEM", "Request", "SERVE_ADDITIVE_PIPELINE",
+    "SERVE_TIMELINE_PIPELINE", "ServeArm", "ServeModel", "ServeStats",
+    "ServeTrace", "TrafficSpec", "lower_traffic", "requests", "serve_arm",
+]

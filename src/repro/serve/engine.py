@@ -1,0 +1,281 @@
+"""Decode-trace generator: traffic → one interleaved Op/TraceEvent stream.
+
+``lower_traffic`` walks a request stream through a continuous-batching
+slot scheduler and emits the same artifacts the training schedule
+builders produce — an ordered op schedule ``[(name, start_s, end_s)]``
+and a per-tensor :class:`~repro.core.schedule.TraceEvent` stream — so
+the existing ``repro.memory`` controller and ``repro.sim.timeline``
+engine replay serving workloads *unchanged*.
+
+Cache entries are per-token-position KV tensors (``kv<rid>.<pos>``, all
+layers folded — see :class:`~repro.serve.model.ServeModel`).  An entry
+is written at its op's end and re-read at the start of **every**
+subsequent decode step of its session — the token-position-dependent
+lifetime that makes serving the opposite of CAMEL's training transients:
+entries live until session end, far past the eDRAM retention floor.
+
+The KV policy is applied inline, because recompute changes op *work* and
+therefore op *time* — a post-hoc trace transform could not keep the
+schedule self-consistent:
+
+``always`` / ``skip``
+    No trace transform; the refresh machinery decides everything
+    (``always`` refreshes every bank; ``skip`` = ``selective`` +
+    ``reads_restore`` — a read restores the row, so a bank whose
+    entries are all re-read within retention never pulses).
+``evict``
+    An entry whose next read falls past its retention deadline is
+    dropped **at the deadline** (an ``evict`` event, timestamped in the
+    past relative to the current op — the event list is re-sorted at
+    the end); the session keeps decoding with a shorter context
+    (``reads_dropped`` is the accuracy proxy).
+``recompute``
+    Same deadline eviction, but the decode op re-derives the entry from
+    the layer input — ``recompute_macs_per_entry`` added to the op's
+    work (so recompute time scales 1/f and its energy ∝ V² through the
+    cost model) and a fresh ``write`` at the op's start; the entry is
+    not read that step (the recomputed value feeds attention directly).
+
+Slot-scheduler diagnostics (request admitted / preempted / session
+cache released) go through ``repro.obs.log`` at DEBUG — enable with
+``REPRO_LOG=debug``; stdout stays untouched.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.schedule import TraceEvent
+from repro.obs import log as obslog
+from repro.serve.model import ServeModel
+from repro.serve.traffic import Request, TrafficSpec
+from repro.serve.traffic import requests as traffic_requests
+
+KV_POLICIES = ("always", "skip", "evict", "recompute")
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """What the engine did, summed over the whole trace (the serving
+    dict on ``ArmReport`` is built from this)."""
+    tokens_served: int = 0         # decode ops executed
+    prefill_tokens: int = 0
+    requests_completed: int = 0
+    requests_preempted: int = 0
+    kv_entries_evicted: int = 0    # deadline drops (evict + recompute)
+    kv_entries_recomputed: int = 0
+    reads_dropped: int = 0         # cache reads lost to evictions
+    total_macs: float = 0.0        # incl. prefill + recompute work
+    read_bits: float = 0.0
+    write_bits: float = 0.0
+    peak_live_bits: float = 0.0
+    max_lifetime_s: float = 0.0    # longest entry write→release window
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ServeTrace:
+    """One lowered traffic run: the schedule/trace pair the sim pipeline
+    consumes, plus the engine's statistics."""
+    events: List[TraceEvent]
+    op_schedule: List[tuple]       # [(op name, start_s, end_s), ...]
+    duration_s: float
+    stats: ServeStats
+
+
+class _Session:
+    __slots__ = ("req", "slot", "tokens_done", "cache", "lost")
+
+    def __init__(self, req: Request, slot: int):
+        self.req = req
+        self.slot = slot
+        self.tokens_done = 0
+        self.cache: dict = {}      # position -> last touch time (s)
+        self.lost = 0              # positions evicted (evict policy)
+
+
+def lower_traffic(model: ServeModel, spec: TrafficSpec,
+                  reqs: Optional[Sequence[Request]] = None, *,
+                  op_seconds: Callable[[float], float],
+                  bits_per_value: float,
+                  kv_policy: str = "always",
+                  retention_s: float = math.inf) -> ServeTrace:
+    """Lower a request stream into one interleaved serving trace.
+
+    Args:
+        model: per-token work / KV shape (:class:`ServeModel`).
+        spec: traffic spec; ``reqs`` overrides its generated stream
+            (must be in arrival order).
+        op_seconds: MACs → seconds at the arm's operating point (the
+            cost stage's pricing; serving ops are MAC-streamed, port
+            timing is resolved per bank by the memory replay).
+        bits_per_value: storage bits per KV value (BFP on eDRAM).
+        kv_policy: one of :data:`KV_POLICIES` (see module docstring).
+        retention_s: the wall-clock retention floor the ``evict`` /
+            ``recompute`` policies expire entries against (ignored by
+            ``always``/``skip`` — their refresh behaviour lives in the
+            memory controller).
+
+    Returns:
+        A :class:`ServeTrace`; ``events`` are globally time-sorted
+        (stable, so intra-op emission order breaks ties).
+    """
+    if kv_policy not in KV_POLICIES:
+        raise ValueError(f"unknown kv policy {kv_policy!r}; "
+                         f"choose from {KV_POLICIES}")
+    upcoming = collections.deque(traffic_requests(spec) if reqs is None
+                                 else reqs)
+    expiring = kv_policy in ("evict", "recompute")
+    entry_bits = model.kv_entry_bits(bits_per_value)
+    stats = ServeStats()
+    events: List[TraceEvent] = []
+    sched: List[tuple] = []
+    pending: collections.deque = collections.deque()
+    slots: dict = {}                       # slot index -> _Session
+    free_slots = list(range(spec.max_batch - 1, -1, -1))   # pop() = lowest
+    births: dict = {}                      # tensor -> write time
+    live_entries = peak_live = 0
+    t = 0.0
+
+    def _release(tensor: str, when: float) -> None:
+        b = births.pop(tensor, None)
+        if b is not None:
+            stats.max_lifetime_s = max(stats.max_lifetime_s, when - b)
+
+    def _drop_session(sess: _Session, op: str, when: float,
+                      kind: str) -> None:
+        nonlocal live_entries
+        for pos in sorted(sess.cache):
+            name = f"kv{sess.req.rid}.{pos}"
+            events.append(TraceEvent(time=when, op=op, tensor=name,
+                                     kind=kind, bits=entry_bits))
+            _release(name, when)
+        live_entries -= len(sess.cache)
+        del slots[sess.slot]
+        free_slots.append(sess.slot)
+        free_slots.sort(reverse=True)
+
+    while upcoming or pending or slots:
+        # absorb every request that has arrived by now
+        while upcoming and upcoming[0].arrival_s <= t:
+            pending.append(upcoming.popleft())
+        if not slots and not pending:
+            t = max(t, upcoming[0].arrival_s)    # idle: jump to arrival
+            continue
+
+        # session churn: a full batch preempts its longest-running
+        # session (past the preempt_after floor) to admit a queued one
+        if spec.preempt_after is not None and pending and not free_slots:
+            victims = [s for s in slots.values()
+                       if s.tokens_done >= spec.preempt_after]
+            if victims:
+                v = max(victims, key=lambda s: (s.tokens_done, -s.req.rid))
+                _drop_session(v, f"x{v.req.rid}", t, "evict")
+                stats.requests_preempted += 1
+                obslog.debug("request_preempted", rid=v.req.rid,
+                             slot=v.slot, tokens_done=v.tokens_done,
+                             t_us=t * 1e6)
+
+        # admit into free slots; prefills serialize on the one array
+        while pending and free_slots:
+            req = pending.popleft()
+            slot = free_slots.pop()
+            op = f"p{req.rid}"
+            macs = model.prefill_macs(req.prompt_len)
+            t1 = t + op_seconds(macs)
+            sess = _Session(req, slot)
+            for pos in range(req.prompt_len):
+                name = f"kv{req.rid}.{pos}"
+                events.append(TraceEvent(time=t1, op=op, tensor=name,
+                                         kind="write", bits=entry_bits))
+                births[name] = t1
+                sess.cache[pos] = t1
+            sched.append((op, t, t1))
+            slots[slot] = sess
+            stats.total_macs += macs
+            stats.prefill_tokens += req.prompt_len
+            stats.write_bits += entry_bits * req.prompt_len
+            live_entries += req.prompt_len
+            peak_live = max(peak_live, live_entries)
+            obslog.debug("request_admitted", rid=req.rid, slot=slot,
+                         prompt_len=req.prompt_len, gen_len=req.gen_len,
+                         queued_us=(t - req.arrival_s) * 1e6)
+            t = t1
+
+        # one decode op per active session, round-robin in slot order
+        for slot in sorted(slots):
+            sess = slots[slot]
+            req = sess.req
+            op = f"d{req.rid}.{sess.tokens_done}"
+            t0 = t
+            n_reads = n_recomputed = 0
+            for pos in sorted(sess.cache):
+                name = f"kv{req.rid}.{pos}"
+                last = sess.cache[pos]
+                if expiring and t0 - last >= retention_s:
+                    # expired: drop at the deadline, not at discovery
+                    deadline = last + retention_s
+                    events.append(TraceEvent(time=deadline, op=op,
+                                             tensor=name, kind="evict",
+                                             bits=entry_bits))
+                    _release(name, deadline)
+                    stats.kv_entries_evicted += 1
+                    if kv_policy == "evict":
+                        del sess.cache[pos]
+                        sess.lost += 1
+                        live_entries -= 1
+                        continue
+                    # recompute: re-derive and re-write at op start; the
+                    # fresh value feeds attention directly (no read)
+                    events.append(TraceEvent(time=t0, op=op, tensor=name,
+                                             kind="write",
+                                             bits=entry_bits))
+                    births[name] = t0
+                    sess.cache[pos] = t0
+                    n_recomputed += 1
+                    stats.kv_entries_recomputed += 1
+                    stats.write_bits += entry_bits
+                    continue
+                events.append(TraceEvent(time=t0, op=op, tensor=name,
+                                         kind="read", bits=entry_bits))
+                sess.cache[pos] = t0
+                n_reads += 1
+            stats.reads_dropped += sess.lost
+            stats.read_bits += entry_bits * n_reads
+            # the new token attends to the surviving cache and itself
+            macs = (model.proj_macs_per_token
+                    + model.attn_macs(n_reads + n_recomputed + 1)
+                    + model.recompute_macs_per_entry * n_recomputed)
+            t1 = t0 + op_seconds(macs)
+            new_pos = req.prompt_len + sess.tokens_done
+            name = f"kv{req.rid}.{new_pos}"
+            events.append(TraceEvent(time=t1, op=op, tensor=name,
+                                     kind="write", bits=entry_bits))
+            births[name] = t1
+            sess.cache[new_pos] = t1
+            sched.append((op, t0, t1))
+            stats.total_macs += macs
+            stats.tokens_served += 1
+            stats.write_bits += entry_bits
+            live_entries += 1
+            peak_live = max(peak_live, live_entries)
+            sess.tokens_done += 1
+            t = t1
+            if sess.tokens_done >= req.gen_len:
+                n_cache = len(sess.cache)
+                _drop_session(sess, op, t, "free")
+                stats.requests_completed += 1
+                stats.latencies_s.append(t - req.arrival_s)
+                obslog.debug("session_evicted", rid=req.rid, slot=slot,
+                             cache_entries=n_cache,
+                             latency_us=(t - req.arrival_s) * 1e6)
+
+    # deadline evictions are timestamped in the past relative to their
+    # discovering op — restore global time order (stable: intra-op
+    # emission order, e.g. write-then-free at equal times, is kept)
+    events.sort(key=lambda ev: ev.time)
+    stats.peak_live_bits = peak_live * entry_bits
+    return ServeTrace(events=events, op_schedule=sched, duration_s=t,
+                      stats=stats)

@@ -1,0 +1,66 @@
+"""Serving-side model shape: the per-token work a decoder LM does.
+
+The training sim lowers DuDNN blocks; serving lowers a small decoder
+transformer instead — what matters to the memory system is not the
+architecture zoo but the KV cache's shape and the MAC work per token,
+so :class:`ServeModel` keeps exactly those knobs (Kelle, arXiv
+2510.16040, models edge LLM decoding the same way: projections +
+attention over a cache whose entries are long-lived relative to eDRAM
+retention).
+
+Units: MACs are multiply-accumulates on the systolic array (priced into
+seconds by the arm's cost model); KV sizes are **values** (one K or V
+element), converted to bits by the pipeline's bits-per-value (BFP on
+eDRAM).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeModel:
+    """A decoder LM as the memory system sees it.
+
+    ``d_kv`` is the **values per KV entry per layer** for one token
+    position — key and value concatenated (2 × the per-layer head
+    width).  One *cache entry* in the trace is one token position's KV
+    across **all** layers (``d_kv × n_layers`` values): per-layer
+    splitting would multiply the event count by ``n_layers`` without
+    changing any lifetime — every layer's slice of position *t* is
+    written by the same op and re-read by every subsequent decode step.
+    """
+    n_layers: int = 8
+    d_model: int = 32
+    mlp_ratio: int = 4             # MLP hidden / d_model
+    d_kv: int = 64                 # K+V values per entry per layer
+
+    @property
+    def proj_macs_per_token(self) -> float:
+        """Cache-independent MACs per decoded token: the QKV/output
+        projections (4·d²) plus the MLP (2·ratio·d²), per layer."""
+        return float((4 + 2 * self.mlp_ratio)
+                     * self.d_model ** 2 * self.n_layers)
+
+    def attn_macs(self, entries: int) -> float:
+        """Attention MACs over ``entries`` live cache entries (QK^T plus
+        the value mix: 2 MACs per cached value, all layers)."""
+        return 2.0 * self.d_kv * self.n_layers * entries
+
+    def prefill_macs(self, prompt_len: int) -> float:
+        """One prefill op's MACs: per-token projections plus causal
+        attention over the growing prefix (Σ 2·d_kv·L·i ≈ d_kv·L·P²)."""
+        return (prompt_len * self.proj_macs_per_token
+                + self.d_kv * self.n_layers * float(prompt_len) ** 2)
+
+    @property
+    def recompute_macs_per_entry(self) -> float:
+        """MACs to re-derive one expired cache entry from the layer
+        input (the KV projections for one position, all layers) — what
+        the ``recompute`` KV policy adds to the decode op instead of
+        reading the entry back."""
+        return 2.0 * self.d_model * self.d_kv * self.n_layers
+
+    def kv_entry_bits(self, bits_per_value: float) -> float:
+        """Storage footprint of one cache entry (all layers) in bits."""
+        return self.d_kv * self.n_layers * bits_per_value

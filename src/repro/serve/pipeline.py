@@ -1,0 +1,302 @@
+"""The serving arm family and its pipeline stages.
+
+A :class:`ServeArm` runs through the same five-stage pipeline shape as
+the training arms — schedule → cost → trace → memory → energy — with
+serving-specific schedule/cost/trace/energy stages and the **memory
+stage reused verbatim** (``stage_timeline`` / ``stage_memory``), so the
+whole bank/refresh/DVFS machinery, flight-recorder spans, and
+``repro.obs.reconcile`` exact-equality work on serving traces out of
+the box.  ``sim.run(arm, timing=...)`` picks the right pipeline via the
+arm's :meth:`ServeArm.select_pipeline` hook.
+
+The KV policy maps onto controller mechanisms:
+
+=============  ==============  =============  =========================
+policy         refresh_policy  reads_restore  engine trace transform
+=============  ==============  =============  =========================
+``always``     always          no             none
+``skip``       selective       yes            none (reads restore rows;
+                                              refresh only fires when a
+                                              gap exceeds retention)
+``evict``      none            yes            drop expired entries at
+                                              their deadline
+``recompute``  none            yes            drop + re-derive expired
+                                              entries (extra MACs)
+=============  ==============  =============  =========================
+
+``evict``/``recompute`` never refresh — expiry is handled in the trace
+itself, and the dropped data is the accounted cost (``evict`` events /
+recompute work), which is why their reports show
+``refresh_free=False``-style ``safe`` flags: data *was* dropped, by
+design, before its last reader.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import edram as ed
+from repro.core import hwmodel as hw
+from repro.core.schedule import OpWork
+from repro.serve.engine import KV_POLICIES, lower_traffic
+from repro.serve.model import ServeModel
+from repro.serve.traffic import TrafficSpec
+from repro.serve.traffic import requests as traffic_requests
+from repro.sim.arm import Arm, WorkloadSpec, register_arm
+from repro.sim.cost import resolve_cost
+from repro.sim.pipeline import (Pipeline, SimContext, stage_memory)
+from repro.sim.report import ArmReport
+from repro.sim.timeline import stage_timeline
+
+#: SystemConfig fields each KV policy implies (see module docstring)
+POLICY_SYSTEM = {
+    "always": dict(refresh_policy="always", reads_restore=False),
+    "skip": dict(refresh_policy="selective", reads_restore=True),
+    "evict": dict(refresh_policy="none", reads_restore=True),
+    "recompute": dict(refresh_policy="none", reads_restore=True),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeArm(Arm):
+    """One serving arm: model shape + traffic + KV policy + system.
+
+    Subclasses :class:`~repro.sim.arm.Arm`, so the registry,
+    ``with_system``/``with_cost``, and the ``sim.sweep`` grid axes
+    (temps, freqs) all apply — ``dataclasses.replace`` preserves the
+    subclass, so a swept serving arm stays a serving arm.  The training
+    ``workload`` is absent (serving lowers traffic, not DuDNN blocks)
+    and ``iters_to_target`` is ``None`` (no TTA/ETA projection —
+    serving throughput lives in ``ArmReport.serving``).
+    """
+    reversible: bool = False
+    workload: Optional[WorkloadSpec] = None
+    iters_to_target: Optional[float] = None
+    model: ServeModel = ServeModel()
+    traffic: TrafficSpec = TrafficSpec()
+    kv_policy: str = "always"
+
+    def select_pipeline(self, timing: str) -> Pipeline:
+        """The serving pipeline a ``timing`` name selects (the hook
+        ``sim.run`` calls when no explicit pipeline is passed)."""
+        if timing == "timeline":
+            return SERVE_TIMELINE_PIPELINE
+        if timing == "additive":
+            return SERVE_ADDITIVE_PIPELINE
+        raise ValueError(f"unknown timing {timing!r} for serving arm "
+                         f"{self.name!r}; choose from "
+                         f"('additive', 'timeline')")
+
+    def with_policy(self, policy: str) -> "ServeArm":
+        """The same arm under a different KV policy (system refresh
+        fields re-derived; the name's policy suffix follows)."""
+        base = self.name.rsplit("/", 1)[0] if "/" in self.name else "Serve"
+        return serve_arm(policy, name=f"{base}/{policy}",
+                         model=self.model, traffic=self.traffic,
+                         system=self.system, cost=self.cost)
+
+    def with_traffic(self, **fields) -> "ServeArm":
+        """New arm with :class:`TrafficSpec` fields replaced."""
+        return dataclasses.replace(
+            self, traffic=dataclasses.replace(self.traffic, **fields))
+
+    def with_model(self, **fields) -> "ServeArm":
+        """New arm with :class:`ServeModel` fields replaced."""
+        return dataclasses.replace(
+            self, model=dataclasses.replace(self.model, **fields))
+
+
+def serve_arm(policy: str = "always", *, name: Optional[str] = None,
+              model: ServeModel = ServeModel(),
+              traffic: TrafficSpec = TrafficSpec(),
+              system: Optional[hw.SystemConfig] = None,
+              cost=None) -> ServeArm:
+    """Build a serving arm: the KV ``policy`` sets the system's
+    ``refresh_policy``/``reads_restore`` fields (see module table); any
+    explicit ``system`` is re-derived onto the policy's mechanism."""
+    if policy not in KV_POLICIES:
+        raise ValueError(f"unknown kv policy {policy!r}; "
+                         f"choose from {KV_POLICIES}")
+    name = name or f"Serve/{policy}"
+    base = system if system is not None else hw.SystemConfig(name=name)
+    return ServeArm(name=name,
+                    system=dataclasses.replace(base,
+                                               **POLICY_SYSTEM[policy]),
+                    model=model, traffic=traffic, kv_policy=policy,
+                    cost=cost)
+
+
+# ------------------------------------------------------------------ stages
+
+def stage_serve_schedule(arm: ServeArm, ctx: SimContext) -> None:
+    """Resolve the traffic: the concrete seeded request stream."""
+    cfg = arm.system
+    ctx.bits = hw.BFP_BITS if cfg.use_edram else hw.FP16_BITS
+    ctx.batch = 1.0      # KV entries are full tensors, never per-sample
+    ctx.extra["requests"] = traffic_requests(arm.traffic)
+
+
+def stage_serve_cost(arm: ServeArm, ctx: SimContext) -> None:
+    """Resolve the operating point.  The decode GEMVs are batched and
+    weight-stationary-pipelined, so the array runs at its peak MAC rate
+    (``array² × f``) — serving utilization losses show up as port
+    stalls in the memory replay, not as a derated MAC rate."""
+    cfg = arm.system
+    point = resolve_cost(arm.cost, cfg)
+    ctx.cost = point
+    ctx.freq_hz = point.freq_hz
+    ctx.compute_scale = point.compute_scale
+    ctx.R = float(cfg.array ** 2) * point.freq_hz
+
+
+def stage_serve_trace(arm: ServeArm, ctx: SimContext) -> None:
+    """Run the decode-trace generator (``repro.serve.engine``) at the
+    resolved operating point; its op schedule / event stream feed the
+    unchanged memory stage."""
+    cfg = arm.system
+    point, R = ctx.cost, ctx.R
+
+    def op_seconds(macs: float) -> float:
+        return point.op_seconds(OpWork(macs=macs), R)
+
+    retention = ed.retention_s(cfg.temp_c) if cfg.use_edram else math.inf
+    tr = lower_traffic(arm.model, arm.traffic, ctx.extra["requests"],
+                       op_seconds=op_seconds, bits_per_value=ctx.bits,
+                       kv_policy=arm.kv_policy, retention_s=retention)
+    ctx.events = tr.events
+    ctx.op_schedule = tr.op_schedule
+    ctx.op_durations = {op: end - start
+                        for op, start, end in tr.op_schedule}
+    ctx.duration_s = tr.duration_s
+    ctx.read_bits = tr.stats.read_bits
+    ctx.write_bits = tr.stats.write_bits
+    ctx.peak_live_bits = tr.stats.peak_live_bits
+    ctx.max_lifetime_s = tr.stats.max_lifetime_s
+    ctx.extra["serve"] = tr.stats
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1,
+            max(0, math.ceil(q * len(sorted_vals)) - 1))
+    return sorted_vals[i]
+
+
+def stage_serve_energy(arm: ServeArm, ctx: SimContext) -> None:
+    """Serving energy/latency accounting; assembles the ArmReport.
+
+    There is no closed-form scalar oracle for a traffic-interleaved
+    trace (the training oracle assumes one iteration's streamed working
+    set), so ``scalar_memory_j``/``oracle_rel_err`` report 0.0 — the
+    controller replay *is* the model here.  Serving throughput numbers
+    land in ``report.serving``.
+    """
+    cfg = arm.system
+    stats = ctx.extra["serve"]
+    compute_j = stats.total_macs * (cfg.mac_pj if cfg.use_edram
+                                    else cfg.mac_pj_fp16) * 1e-12 \
+        * ctx.compute_scale
+    ctrl = ctx.controller
+    if ctrl is not None:
+        memory_j = ctrl.energy.total_j
+        stall_s = ctrl.stall_s
+        offchip_bits = ctrl.offchip_bits
+        rf = ((not any(b.refreshed for b in ctrl.banks)) and ctrl.safe
+              if cfg.use_edram else True)
+    else:
+        memory_j = 0.0
+        stall_s = 0.0
+        offchip_bits = 0.0
+        rf = False
+    latency_s = ctx.duration_s + stall_s + (
+        offchip_bits / cfg.offchip_bw_bps if offchip_bits else 0.0)
+    leakage_j = 0.0
+    if cfg.charge_leakage:
+        mw_per_kb = (cfg.edram.leakage_mw_per_kb if cfg.use_edram
+                     else cfg.edram.sram_leakage_mw_per_kb)
+        leakage_j = mw_per_kb * 1e-3 * (cfg.onchip_bits / 8.0 / 1024.0) \
+            * latency_s
+    energy_j = compute_j + memory_j + leakage_j
+    tokens = max(1, stats.tokens_served)
+    lat = sorted(stats.latencies_s)
+    serving = {
+        "policy": arm.kv_policy,
+        "seed": arm.traffic.seed,
+        "arrival_per_s": arm.traffic.arrival_per_s,
+        "max_batch": arm.traffic.max_batch,
+        "requests": arm.traffic.n_requests,
+        "requests_completed": stats.requests_completed,
+        "requests_preempted": stats.requests_preempted,
+        "tokens_served": stats.tokens_served,
+        "prefill_tokens": stats.prefill_tokens,
+        "tokens_per_s": stats.tokens_served / latency_s
+        if latency_s > 0 else 0.0,
+        "j_per_token": energy_j / tokens,
+        "latency_p50_s": _percentile(lat, 0.50),
+        "latency_p95_s": _percentile(lat, 0.95),
+        "latency_mean_s": sum(lat) / len(lat) if lat else 0.0,
+        "kv_entries_evicted": stats.kv_entries_evicted,
+        "kv_entries_recomputed": stats.kv_entries_recomputed,
+        "reads_dropped": stats.reads_dropped,
+        "restore_j": ctrl.restore_j if ctrl is not None else 0.0,
+    }
+    if ctx.recorder is not None:
+        ctx.recorder.meta.setdefault("arm", arm.name)
+        ctx.recorder.counter("compute_j", latency_s, compute_j)
+        ctx.recorder.counter("leakage_j", latency_s, leakage_j)
+        ctx.recorder.counter("energy_j", latency_s, energy_j)
+    from repro.sim.pipeline import _config_dict, _memory_dict
+    ctx.report = ArmReport(
+        arm=arm.name,
+        reversible=False,
+        latency_s=latency_s,
+        energy_j=energy_j,
+        compute_j=compute_j,
+        memory_j=memory_j,
+        scalar_memory_j=0.0,
+        oracle_rel_err=0.0,
+        stall_s=stall_s,
+        max_lifetime_s=ctx.max_lifetime_s,
+        refresh_free=rf,
+        peak_live_bits=ctx.peak_live_bits,
+        offchip_bits=offchip_bits,
+        iters_to_target=None,
+        tta_s=None,
+        eta_j=None,
+        timing=ctrl.timing if ctrl is not None else "scalar",
+        refresh_stall_s=ctrl.refresh_stall_s if ctrl is not None else 0.0,
+        refresh_hidden_j=ctrl.refresh_hidden_j if ctrl is not None else 0.0,
+        leakage_j=leakage_j,
+        rows_refreshed=ctrl.rows_refreshed if ctrl is not None else 0,
+        row_hidden_frac=ctrl.row_hidden_frac if ctrl is not None else 0.0,
+        freq_hz=ctx.freq_hz or cfg.freq_hz,
+        pulse_exceeds_retention=(ctrl.pulse_exceeds_retention
+                                 if ctrl is not None else False),
+        timeline=(dict(ctrl.timeline)
+                  if ctrl is not None and ctrl.timeline else {}),
+        serving=serving,
+        config=_config_dict(arm),
+        memory=_memory_dict(ctrl),
+        controller=ctrl,
+        trace=ctx.recorder,
+    )
+
+
+SERVE_TIMELINE_PIPELINE = Pipeline((
+    ("schedule", stage_serve_schedule),
+    ("cost", stage_serve_cost),
+    ("trace", stage_serve_trace),
+    ("memory", stage_timeline),
+    ("energy", stage_serve_energy),
+))
+
+SERVE_ADDITIVE_PIPELINE = SERVE_TIMELINE_PIPELINE.with_stage(
+    "memory", stage_memory)
+
+
+# the serving family, registered next to the Fig-24 training arms
+for _policy in KV_POLICIES:
+    register_arm(serve_arm(_policy))
+del _policy

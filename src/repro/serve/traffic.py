@@ -1,0 +1,70 @@
+"""Deterministic seeded serving traffic (request mix + arrival process).
+
+A :class:`TrafficSpec` is frozen and hashable, so it rides on a frozen
+``ServeArm`` and crosses the ``sim.sweep`` process pool; the arrival
+process is a plain ``random.Random(seed)`` Poisson stream, so the same
+spec always lowers to the *identical* trace (property-tested in
+tests/test_serve_props.py).
+
+Time is seconds on the simulation timeline.  Serving ops are
+microsecond-scale on the modeled array, so interesting arrival rates sit
+in the 10³–10⁵ requests/s range: well below that, sessions never
+overlap (the continuous-batching scheduler degenerates to one slot and
+every KV entry is re-read within an op time); well above it, the batch
+saturates and per-session decode gaps stretch past the eDRAM retention
+floor — which is exactly the regime where the KV policies diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: arrive, prefill the prompt, decode
+    ``gen_len`` tokens, release the session's cache."""
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    gen_len: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """Seeded arrival process + request mix + slot-scheduler limits.
+
+    ``max_batch`` is the continuous-batching slot count: at most that
+    many sessions decode concurrently; further arrivals queue.
+    ``preempt_after`` (sessions that have decoded at least that many
+    tokens may be preempted — cache evicted, session killed — to admit
+    a queued request when every slot is busy) models session churn;
+    ``None`` disables preemption.
+    """
+    seed: int = 0
+    n_requests: int = 10
+    arrival_per_s: float = 2.0e4
+    prompt_lens: Tuple[int, ...] = (4, 8)
+    gen_lens: Tuple[int, ...] = (4, 8)
+    max_batch: int = 4
+    preempt_after: Optional[int] = None
+
+
+def requests(spec: TrafficSpec) -> Tuple[Request, ...]:
+    """The spec's concrete request stream, in arrival order.
+
+    Inter-arrival times are exponential at ``arrival_per_s``;
+    prompt/generation lengths draw uniformly from the mix tuples.  All
+    randomness comes from one ``random.Random(spec.seed)``, so equal
+    specs yield equal streams.
+    """
+    rng = random.Random(spec.seed)
+    t = 0.0
+    out = []
+    for rid in range(spec.n_requests):
+        t += rng.expovariate(spec.arrival_per_s)
+        out.append(Request(rid=rid, arrival_s=t,
+                           prompt_len=rng.choice(spec.prompt_lens),
+                           gen_len=rng.choice(spec.gen_lens)))
+    return tuple(out)

@@ -64,3 +64,8 @@ __all__ = [
     "replay_timeline", "resolve_cost", "resolve_pipeline", "run",
     "stage_timeline", "sweep",
 ]
+
+# side-effect: registers the serving arm family (Serve/always|skip|
+# evict|recompute, docs/serving.md) so sim.get_arm resolves them.  Last,
+# because repro.serve imports from the sim submodules above.
+import repro.serve  # noqa: E402,F401  isort:skip

@@ -79,6 +79,9 @@ class SimContext:
     # optional repro.obs.SpanRecorder (sim.run(trace=...)); stages that
     # support it record spans/counters — observation only, never timing
     recorder: object = None
+    # free-form scratch for custom stages (e.g. repro.serve stashes its
+    # traffic/engine statistics here for its energy stage to read)
+    extra: dict = dataclasses.field(default_factory=dict)
 
 
 # ------------------------------------------------------------------ stages
@@ -187,7 +190,8 @@ def stage_memory(arm: Arm, ctx: SimContext) -> None:
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         op_durations=ctx.op_durations, retention_s=retention,
-        granularity=cfg.refresh_granularity, recorder=ctx.recorder)
+        granularity=cfg.refresh_granularity,
+        reads_restore=cfg.reads_restore, recorder=ctx.recorder)
 
 
 def _buffered_partition(events) -> tuple[float, list]:
@@ -374,6 +378,7 @@ def _memory_dict(ctrl) -> dict:
                        if math.isfinite(ctrl.interval_s) else None),
         "pulse_exceeds_retention": ctrl.pulse_exceeds_retention,
         "read_j": ctrl.read_j,
+        "restore_j": ctrl.restore_j,
         "write_j": ctrl.write_j,
         "refresh_j": ctrl.refresh_j,
         "refresh_read_j": ctrl.refresh_read_j,
@@ -388,6 +393,7 @@ def _memory_dict(ctrl) -> dict:
         "refresh_count": ctrl.refresh_count,
         "safe": ctrl.safe,
         "spilled": list(ctrl.spilled_tensors),
+        "evicted": list(ctrl.evicted_tensors),
         "timeline": dict(ctrl.timeline) if ctrl.timeline else None,
         "banks": [dataclasses.asdict(b) for b in ctrl.banks],
     }
@@ -540,8 +546,15 @@ def run(arm: Arm, pipeline: Optional[Pipeline] = None, *,
     if trace is True:
         from repro.obs.recorder import SpanRecorder
         recorder = SpanRecorder()
-    report, _ = resolve_pipeline(timing, pipeline).run(
-        arm, recorder=recorder, profile=profile)
+    # an arm that owns a pipeline family (e.g. the repro.serve arms, whose
+    # schedule/trace/energy stages are serving-specific) maps the timing
+    # name to its own Pipeline; an explicit pipeline= still wins
+    if pipeline is None and hasattr(arm, "select_pipeline"):
+        pipe = arm.select_pipeline(
+            DEFAULT_TIMING if timing is None else timing)
+    else:
+        pipe = resolve_pipeline(timing, pipeline)
+    report, _ = pipe.run(arm, recorder=recorder, profile=profile)
     return report
 
 

@@ -62,6 +62,12 @@ class ArmReport:
     # timeline-model summary (makespan, pushback, pulse placement counts);
     # empty dict under additive/scalar timing
     timeline: dict = dataclasses.field(default_factory=dict)
+    # serving-workload summary (repro.serve arms only): tokens served,
+    # tokens/s, J/token, per-request latency percentiles, KV-policy
+    # counters (entries evicted/recomputed, restore_j).  Empty dict on
+    # training arms — serialized only when non-empty, so their historical
+    # to_dict() shape is unchanged
+    serving: dict = dataclasses.field(default_factory=dict)
     # fully resolved inputs and the controller's breakdown, JSON-safe
     config: dict = dataclasses.field(default_factory=dict)
     memory: dict = dataclasses.field(default_factory=dict)
@@ -95,6 +101,8 @@ class ArmReport:
         d["timeline"] = self.timeline
         d["config"] = self.config
         d["memory"] = self.memory
+        if self.serving:
+            d["serving"] = self.serving
         if self.profile:
             d["profile"] = self.profile
         return d

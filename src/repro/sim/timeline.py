@@ -116,6 +116,7 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
                     alloc_policy: str = "pingpong", freq_hz: float = 500e6,
                     sample_scale: float = 1.0, refresh_guard: float = 1.0,
                     retention_s=None, granularity: str = "bank",
+                    reads_restore: bool = False,
                     recorder=None) -> mtr.ControllerReport:
     """Replay ``events`` with the closed-loop timeline model.
 
@@ -144,7 +145,8 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
-        granularity=granularity, recorder=recorder)
+        granularity=granularity, reads_restore=reads_restore,
+        recorder=recorder)
 
     makespan = closed_loop_walk(core, op_schedule, recorder=recorder)
     makespan = max(makespan, duration_s)
@@ -218,6 +220,7 @@ def stage_timeline(arm: Arm, ctx: SimContext) -> None:
         refresh_policy=policy, alloc_policy=cfg.alloc_policy,
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         retention_s=retention, granularity=cfg.refresh_granularity,
+        reads_restore=cfg.reads_restore,
         recorder=ctx.recorder)
 
 

@@ -1,0 +1,257 @@
+"""repro.serve: golden pins, policy crossovers, and pipeline plumbing.
+
+Three layers of protection:
+
+- **Golden pins** — one serving arm at the default operating point
+  (60 °C, nominal clock, seed-0 traffic) pinned to exact values, and
+  the four Fig-24 training arms pinned bit-identical to their
+  pre-serving baselines (the serving substrate — ``reads_restore``,
+  ``evict`` events, the ``serving`` report field — must be invisible to
+  training arms).
+- **Directional crossovers** — the physics the subsystem exists to
+  show: ``skip`` beats ``always`` while reads outpace retention (60 °C,
+  sequential sessions) and loses once retention shrinks under the
+  decode gap (100 °C); expiries appear only past the retention-bound
+  arrival regime; ``recompute`` pays more than ``evict`` per expiry.
+- **Plumbing** — reconcile exact-equality on serving traces (bank and
+  row granularity), both timings, sweep-axis subclass preservation,
+  preemption, token conservation across policies, and the slot
+  scheduler's REPRO_LOG-gated DEBUG lines.
+"""
+import math
+
+import pytest
+
+from repro import obs, sim
+from repro.core import edram as ed
+from repro.serve import (KV_POLICIES, ServeModel, TrafficSpec,
+                         lower_traffic, requests, serve_arm)
+
+# ------------------------------------------------------------- golden pins
+
+# Serve/always at the defaults: 60 °C, FixedClock 500 MHz, seed-0
+# traffic (10 requests @ 2e4/s, batch 4).  Exact values — the serving
+# stack is deterministic end to end.
+SERVE_ALWAYS_PIN = {
+    "latency_s": 0.0008392538473060172,
+    "energy_j": 4.734524585535741e-06,
+    "compute_j": 4.562432e-06,
+    "memory_j": 1.7209258553574078e-07,
+    "stall_s": 0.0,
+    "refresh_hidden_j": 1.4017268509129635e-07,
+}
+
+# the four Fig-24 training arms, pinned before repro.serve existed —
+# the serving substrate must not move them by a single bit
+FIG24_PINS = {
+    "DuDNN+CAMEL": (0.0010118656680769748, 5.0440828927999996e-05,
+                    0.00013932778681588595),
+    "FR+SRAM": (0.011900566588235295, 0.00021226073702399994,
+                0.01007778890322581),
+    "CA+CAMEL": (0.0010118656680769748, 5.0440828927999996e-05,
+                 0.00013932778681588595),
+    "BO+CAMEL": (0.0010118656680769748, 5.0440828927999996e-05,
+                 0.00013932778681588595),
+}
+
+
+def test_serve_always_golden_pin():
+    rep = sim.run(sim.get_arm("Serve/always"))
+    for field, want in SERVE_ALWAYS_PIN.items():
+        assert getattr(rep, field) == want, field
+    s = rep.serving
+    assert s["tokens_served"] == 68
+    assert s["prefill_tokens"] == 56
+    assert s["requests_completed"] == 10
+    assert s["kv_entries_evicted"] == 0
+
+
+def test_fig24_arms_unchanged_by_serving_substrate():
+    for name, (lat, e, stall) in FIG24_PINS.items():
+        rep = sim.run(sim.get_arm(name))
+        assert rep.latency_s == lat, name
+        assert rep.energy_j == e, name
+        assert rep.stall_s == stall, name
+        assert not rep.serving, name          # training arms: empty dict
+        assert "serving" not in rep.to_dict(), name
+
+
+# ------------------------------------------------------------- crossovers
+
+def _arm(policy, **traffic):
+    a = sim.get_arm(f"Serve/{policy}")
+    return a.with_traffic(**traffic) if traffic else a
+
+
+SEQUENTIAL = dict(max_batch=1, arrival_per_s=2.0e3)
+
+
+def test_skip_beats_always_at_60c():
+    """Sequential sessions at 60 °C: every entry is re-read within
+    retention, so read-triggered restore replaces refresh entirely."""
+    always = sim.run(_arm("always", **SEQUENTIAL))
+    skip = sim.run(_arm("skip", **SEQUENTIAL))
+    assert skip.refresh_free          # no pulses fired, no data lost
+    assert not always.refresh_free    # "always" pulses by definition
+    assert skip.energy_j < always.energy_j
+    assert skip.memory_j < always.memory_j
+
+
+def test_always_beats_skip_at_100c():
+    """At 100 °C retention (3.4 µs) drops under the decode gap: skip
+    falls back to refreshing *and* still pays restore on every read."""
+    always = sim.run(_arm("always", **SEQUENTIAL).with_system(temp_c=100.0))
+    skip = sim.run(_arm("skip", **SEQUENTIAL).with_system(temp_c=100.0))
+    assert not skip.refresh_free
+    assert always.energy_j < skip.energy_j
+
+
+def test_expiries_appear_with_arrival_rate():
+    """Sequential low-rate traffic keeps every gap under retention (no
+    expiries); a saturated batch stretches per-session gaps past it."""
+    low = sim.run(_arm("evict", **SEQUENTIAL))
+    high = sim.run(_arm("evict", arrival_per_s=1.0e5))
+    assert low.serving["kv_entries_evicted"] == 0
+    assert low.serving["reads_dropped"] == 0
+    assert high.serving["kv_entries_evicted"] > 0
+    assert high.serving["reads_dropped"] > 0
+
+
+def test_recompute_costs_more_than_evict_at_high_rate():
+    evict = sim.run(_arm("evict", arrival_per_s=1.0e5))
+    rec = sim.run(_arm("recompute", arrival_per_s=1.0e5))
+    assert rec.serving["kv_entries_recomputed"] > 0
+    assert evict.serving["kv_entries_recomputed"] == 0
+    assert rec.energy_j > evict.energy_j
+    assert rec.latency_s > evict.latency_s
+    # recompute preserves context, evict trades it away
+    assert rec.serving["reads_dropped"] == 0
+    assert evict.serving["reads_dropped"] > 0
+
+
+def test_token_conservation_across_policies():
+    """Every policy serves the same tokens (absent preemption): expiry
+    changes *cost*, never the number of tokens decoded."""
+    served = {p: sim.run(_arm(p, arrival_per_s=1.0e5)).serving
+              for p in KV_POLICIES}
+    tokens = {p: s["tokens_served"] for p, s in served.items()}
+    assert len(set(tokens.values())) == 1, tokens
+    assert all(s["requests_completed"] == 10 for s in served.values())
+
+
+# --------------------------------------------------------------- plumbing
+
+def test_serving_reconciles_exactly():
+    for gran in ("bank", "row"):
+        arm = sim.get_arm("Serve/skip").with_system(
+            refresh_granularity=gran)
+        rep = sim.run(arm, trace=True)
+        res = obs.reconcile(rep.trace, rep)
+        assert res.ok, (gran, res)
+
+
+def test_serving_timings_and_report_roundtrip():
+    rep_tl = sim.run(sim.get_arm("Serve/always"), timing="timeline")
+    rep_ad = sim.run(sim.get_arm("Serve/always"), timing="additive")
+    assert rep_tl.timing == "timeline" and rep_ad.timing == "additive"
+    # energy accounting is shared between the two timings
+    assert rep_tl.energy_j == pytest.approx(rep_ad.energy_j, rel=1e-12)
+    d = rep_tl.to_dict()
+    assert d["serving"]["policy"] == "always"
+    rt = sim.ArmReport.from_dict(d)
+    assert rt.serving == rep_tl.serving
+    with pytest.raises(ValueError):
+        sim.run(sim.get_arm("Serve/always"), timing="bogus")
+
+
+def test_sweep_axes_preserve_serving_arm():
+    reps = sim.sweep([sim.get_arm("Serve/skip")], temps=[60.0, 100.0],
+                     freqs=[2.5e8, 5.0e8])
+    assert len(reps) == 4
+    assert all(r.serving for r in reps)
+    assert {r.freq_hz for r in reps} == {2.5e8, 5.0e8}
+    # slower clock stretches the trace: fewer tokens/s at 250 MHz
+    by_freq = {}
+    for r in reps:
+        by_freq.setdefault(r.freq_hz, []).append(
+            r.serving["tokens_per_s"])
+    assert max(by_freq[2.5e8]) < min(by_freq[5.0e8])
+
+
+def test_policy_registry_and_factory():
+    assert all(f"Serve/{p}" in sim.arms() for p in KV_POLICIES)
+    with pytest.raises(ValueError):
+        serve_arm("lru")
+    arm = sim.get_arm("Serve/always")
+    assert arm.with_policy("evict").system.refresh_policy == "none"
+    assert arm.system.refresh_policy == "always"
+    assert not arm.system.reads_restore
+    assert sim.get_arm("Serve/skip").system.reads_restore
+    with pytest.raises(ValueError):
+        arm.select_pipeline("bogus")
+
+
+def test_preemption_churns_sessions():
+    spec = dict(arrival_per_s=1.0e5, max_batch=2, preempt_after=2)
+    rep = sim.run(_arm("always", **spec))
+    s = rep.serving
+    assert s["requests_preempted"] > 0
+    assert s["requests_completed"] + s["requests_preempted"] == 10
+    # preempted sessions' decoded tokens still count
+    assert s["tokens_served"] > 0
+
+
+def test_engine_trace_is_wellformed():
+    """The lowered trace is globally time-ordered and conserves
+    entries: every write is eventually freed or evicted."""
+    model, spec = ServeModel(), TrafficSpec(arrival_per_s=1.0e5)
+    tr = lower_traffic(model, spec, requests(spec),
+                       op_seconds=lambda m: m / 1.8e10,
+                       bits_per_value=58 / 9, kv_policy="evict",
+                       retention_s=ed.retention_s(60.0))
+    times = [ev.time for ev in tr.events]
+    assert times == sorted(times)
+    writes = sum(1 for ev in tr.events if ev.kind == "write")
+    ends = sum(1 for ev in tr.events if ev.kind in ("free", "evict"))
+    assert writes == ends
+    assert tr.stats.max_lifetime_s > ed.retention_s(60.0)  # serving regime
+    with pytest.raises(ValueError):
+        lower_traffic(model, spec, op_seconds=lambda m: m / 1.8e10,
+                      bits_per_value=58 / 9, kv_policy="lru")
+
+
+def test_slot_scheduler_debug_logging(monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_LOG", "debug")
+    sim.run(_arm("always", arrival_per_s=1.0e5, max_batch=2,
+                 preempt_after=2))
+    err = capsys.readouterr().err
+    assert "request_admitted" in err
+    assert "request_preempted" in err
+    assert "session_evicted" in err
+    # default threshold (warn) keeps stderr clean
+    monkeypatch.delenv("REPRO_LOG")
+    sim.run(_arm("always"))
+    assert "request_admitted" not in capsys.readouterr().err
+
+
+def test_schedule_serving_op_builders():
+    """core.schedule gained serving-op builders: work-carrying ops whose
+    reads/writes name KV entries (usable with the core simulator)."""
+    from repro.core.schedule import decode_op, prefill_op
+
+    p = prefill_op("p0", macs=1e5, kv_writes=["kv0.0", "kv0.1"], rate=1.8e10)
+    assert p.work.macs == 1e5 and p.reads == ()
+    assert p.writes == ("kv0.0", "kv0.1")
+    d = decode_op("d0.0", macs=2e5, kv_reads=["kv0.0", "kv0.1"],
+                  kv_writes=["kv0.2"], rate=1.8e10)
+    assert d.reads == ("kv0.0", "kv0.1") and d.writes == ("kv0.2",)
+    assert d.duration == pytest.approx(2e5 / 1.8e10)
+
+
+def test_benchmark_suite_registered():
+    from benchmarks import serve_sweep
+    from benchmarks.run import SUITES
+    assert SUITES["serve_sweep"] is serve_sweep.run
+    ms = serve_sweep.measurements()
+    assert [m["policy"] for m in ms] == list(KV_POLICIES)
+    assert all(m["tokens_per_s"] > 0 for m in ms)

@@ -1,0 +1,117 @@
+"""Hypothesis property tests for the serving engine (optional-dep gated
+like tests/test_rows_props.py): across random traffic specs and KV
+policies —
+
+- determinism: equal specs lower to the *identical* trace (events, op
+  schedule, stats), so a seeded serving arm is exactly reproducible;
+- retention safety of ``skip``: when every decode gap stays under the
+  retention floor, read-triggered restore keeps every bank's residency
+  clock under retention — zero pulses, ``refresh_free=True``;
+- token conservation: every policy decodes exactly Σ gen_len tokens
+  (expiry changes cost, never the tokens served), and the evict/
+  recompute expiry counters agree with their trace's event stream.
+"""
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings
+
+from repro.serve import (KV_POLICIES, ServeModel, TrafficSpec,
+                         lower_traffic, requests)
+
+R_MAC_S = 1.8e10               # the default arm's 6×6 array @ 500 MHz
+BITS = 58 / 9
+
+
+def _seconds(macs: float) -> float:
+    return macs / R_MAC_S
+
+
+_specs = st.builds(
+    TrafficSpec,
+    seed=st.integers(min_value=0, max_value=2**31),
+    n_requests=st.integers(min_value=1, max_value=12),
+    arrival_per_s=st.sampled_from([2.0e3, 2.0e4, 1.0e5]),
+    prompt_lens=st.just((4, 8)),
+    gen_lens=st.just((4, 8)),
+    max_batch=st.integers(min_value=1, max_value=4),
+    preempt_after=st.sampled_from([None, 2]),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=_specs, policy=st.sampled_from(KV_POLICIES),
+       retention_us=st.sampled_from([3.4, 6.64, math.inf]))
+def test_same_seed_identical_trace(spec, policy, retention_us):
+    kw = dict(op_seconds=_seconds, bits_per_value=BITS,
+              kv_policy=policy, retention_s=retention_us * 1e-6)
+    a = lower_traffic(ServeModel(), spec, **kw)
+    b = lower_traffic(ServeModel(), spec, **kw)
+    assert a.events == b.events
+    assert a.op_schedule == b.op_schedule
+    assert a.duration_s == b.duration_s
+    assert a.stats == b.stats
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=_specs.filter(lambda s: s.preempt_after is None),
+       temp_c=st.sampled_from([30.0, 60.0]))
+def test_read_before_retention_skips_refresh(spec, temp_c):
+    """Whenever the trace's largest read-to-read gap sits under the
+    retention floor, the ``skip`` arm fires zero refresh pulses."""
+    from repro import sim
+    from repro.core import edram as ed
+
+    arm = (sim.get_arm("Serve/skip")
+           .with_traffic(**{f.name: getattr(spec, f.name)
+                            for f in spec.__dataclass_fields__.values()})
+           .with_system(temp_c=temp_c))
+    rep = sim.run(arm)
+    retention = ed.retention_s(temp_c)
+    # max inter-touch gap per tensor, from the arm's own lowered trace
+    tr = lower_traffic(arm.model, arm.traffic, op_seconds=_seconds,
+                       bits_per_value=BITS)
+    last: dict = {}
+    gap = 0.0
+    for ev in tr.events:
+        if ev.kind in ("write", "read"):
+            if ev.tensor in last:
+                gap = max(gap, ev.time - last[ev.tensor])
+            last[ev.tensor] = ev.time
+        elif ev.kind in ("free", "evict"):
+            t0 = last.pop(ev.tensor, None)
+            if t0 is not None:
+                gap = max(gap, ev.time - t0)
+    if gap < retention:
+        assert rep.refresh_free
+        assert rep.memory["refresh_count"] == 0
+    else:
+        assert not rep.refresh_free
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=_specs.filter(lambda s: s.preempt_after is None),
+       retention_us=st.sampled_from([3.4, 6.64]))
+def test_policies_conserve_tokens(spec, retention_us):
+    expected = sum(r.gen_len for r in requests(spec))
+    traces = {p: lower_traffic(ServeModel(), spec, op_seconds=_seconds,
+                               bits_per_value=BITS, kv_policy=p,
+                               retention_s=retention_us * 1e-6)
+              for p in KV_POLICIES}
+    for p, tr in traces.items():
+        assert tr.stats.tokens_served == expected, p
+        assert tr.stats.requests_completed == spec.n_requests, p
+        # counters agree with the event stream
+        evicts = sum(1 for ev in tr.events if ev.kind == "evict")
+        assert tr.stats.kv_entries_evicted == evicts, p
+        writes = sum(1 for ev in tr.events if ev.kind == "write")
+        ends = sum(1 for ev in tr.events
+                   if ev.kind in ("free", "evict"))
+        assert writes == ends, p
+    assert traces["always"].stats.kv_entries_evicted == 0
+    assert (traces["recompute"].stats.kv_entries_recomputed
+            == traces["recompute"].stats.kv_entries_evicted)
+    assert traces["evict"].stats.kv_entries_recomputed == 0
