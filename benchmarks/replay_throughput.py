@@ -10,14 +10,22 @@ bank and row refresh granularity, with refresh forced on (``always``
 policy, ~``TICKS`` retention ticks inside the trace) so the scheduler
 does real placement work.
 
-Rows: ``replay_throughput/<granularity>,us_per_op,ops_per_s=...``.
-A third row replays with a flight recorder attached
-(``repro.obs.SpanRecorder``) to price the observation overhead.
+Rows: ``replay_throughput/<granularity>[+vector],us_per_op,...`` — one
+pair per granularity (the reference ``python`` walk and the numpy
+``vector`` interval engine, which must produce bit-identical reports;
+``tests/test_replay_backends.py`` enforces that, this suite prices it).
+A final row replays with a flight recorder attached
+(``repro.obs.SpanRecorder``) to price the observation overhead — always
+on the reference walk, since a recorder downgrades ``vector``.
 
 The committed record lives in ``BENCH_replay.json`` (repo root);
 re-measure and append with::
 
     PYTHONPATH=src python -m benchmarks.replay_throughput --update
+
+``--backend python|vector`` restricts the timed measurements to one
+engine; ``tools/check_replay_bench.py`` gates CI on a fresh ``--json``
+dump staying within 0.7x of the best committed record per mode.
 
 Each record carries the date, commit-independent workload shape, and
 ops/sec per granularity, so the trajectory stays comparable across PRs.
@@ -70,7 +78,8 @@ def synthetic_trace(n_ops: int = N_OPS,
     return events, op_schedule, n_ops * dt, cfg
 
 
-def _measure(granularity: str, recorder=None, n_ops: int = N_OPS) -> dict:
+def _measure(granularity: str, recorder=None, n_ops: int = N_OPS,
+             backend: str = "python") -> dict:
     """One timed replay; returns the measurement record (no I/O)."""
     events, op_schedule, duration_s, cfg = synthetic_trace(n_ops)
     t0 = time.perf_counter()
@@ -78,10 +87,11 @@ def _measure(granularity: str, recorder=None, n_ops: int = N_OPS) -> dict:
         events, cfg, op_schedule=op_schedule, temp_c=100.0,
         duration_s=duration_s, refresh_policy="always",
         freq_hz=FREQ_HZ, retention_s=duration_s / TICKS,
-        granularity=granularity, recorder=recorder)
+        granularity=granularity, recorder=recorder, backend=backend)
     wall = time.perf_counter() - t0
     return {
         "granularity": granularity,
+        "backend": backend,
         "traced": recorder is not None,
         "n_ops": n_ops,
         "events": len(events),
@@ -92,19 +102,34 @@ def _measure(granularity: str, recorder=None, n_ops: int = N_OPS) -> dict:
     }
 
 
-def measurements(n_ops: int = N_OPS) -> list:
-    return [
-        _measure("bank", n_ops=n_ops),
-        _measure("row", n_ops=n_ops),
-        _measure("bank", recorder=SpanRecorder(), n_ops=n_ops),
-    ]
+def measurements(n_ops: int = N_OPS, backends=("python", "vector")) -> list:
+    out = []
+    for backend in backends:
+        # discarded warmup: the first replay in a process pays module
+        # imports and numpy dispatch setup (~2x on the vector engine),
+        # which would gate on process start order instead of throughput
+        _measure("bank", n_ops=min(n_ops, 100), backend=backend)
+        out.append(_measure("bank", n_ops=n_ops, backend=backend))
+        out.append(_measure("row", n_ops=n_ops, backend=backend))
+    if "python" in backends:
+        # tracing forces the reference walk (vector downgrades), so the
+        # observation-overhead row only exists for the python engine
+        out.append(_measure("bank", recorder=SpanRecorder(), n_ops=n_ops))
+    return out
+
+
+def mode_tag(m: dict) -> str:
+    """The stable row/mode key for one measurement record."""
+    return (m["granularity"]
+            + ("+vector" if m.get("backend") == "vector" else "")
+            + ("+trace" if m["traced"] else ""))
 
 
 def run() -> list:
     """Benchmark-harness entry (``benchmarks.run --only replay``)."""
     rows = []
     for m in measurements():
-        tag = m["granularity"] + ("+trace" if m["traced"] else "")
+        tag = mode_tag(m)
         rows.append({
             "row": (f"replay_throughput/{tag},"
                     f"{m['wall_s'] / m['n_ops'] * 1e6:.2f},"
@@ -112,6 +137,7 @@ def run() -> list:
                     f"n_ops={m['n_ops']};events={m['events']};"
                     f"pulses={m['pulses']};spans={m['spans']}"),
             "granularity": m["granularity"],
+            "backend": m["backend"],
             "ops_per_s": m["ops_per_s"],
         })
     return rows
@@ -138,9 +164,25 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update", action="store_true",
                     help=f"append a record to {BENCH_PATH.name}")
+    ap.add_argument("--backend", choices=("python", "vector", "all"),
+                    default="all",
+                    help="restrict timed measurements to one replay "
+                         "engine (default: both)")
+    ap.add_argument("--json", type=pathlib.Path, metavar="PATH",
+                    help="dump the measurement records as JSON (the "
+                         "input tools/check_replay_bench.py gates on)")
     args = ap.parse_args()
     if args.update:
         rec = update_bench()
         print(f"appended {rec['date']} record to {BENCH_PATH}")
-    for r in run():
-        print(r["row"] if isinstance(r, dict) else r)
+    backends = (("python", "vector") if args.backend == "all"
+                else (args.backend,))
+    ms = measurements(backends=backends)
+    if args.json:
+        args.json.write_text(json.dumps(ms, indent=1) + "\n")
+    for m in ms:
+        print(f"replay_throughput/{mode_tag(m)},"
+              f"{m['wall_s'] / m['n_ops'] * 1e6:.2f},"
+              f"ops_per_s={m['ops_per_s']:.0f};"
+              f"n_ops={m['n_ops']};events={m['events']};"
+              f"pulses={m['pulses']};spans={m['spans']}")

@@ -85,6 +85,12 @@ class SystemConfig:
     # retention never needs a refresh pulse.  Off for the training arms
     # (their golden pins predate it).
     reads_restore: bool = False
+    # trace-replay engine: "python" (the scalar reference walk) or
+    # "vector" (numpy interval engine, bit-identical reports — see
+    # repro.memory.vector).  Span recording (repro.obs) always runs on
+    # the reference walk: a recorder downgrades "vector" with a logged
+    # warning.
+    replay_backend: str = "python"      # python | vector
     # bank count the controller splits ``onchip_bits`` into when
     # ``use_edram=False`` (the paper's 4×48KB activation SRAMs)
     sram_banks: int = 4

@@ -20,15 +20,16 @@ from repro.memory.allocator import ALLOC_POLICIES, Allocator, Placement
 from repro.memory.refresh import (REFRESH_GRANULARITIES, REFRESH_POLICIES,
                                   PulsePlacement, RefreshDecision,
                                   RefreshScheduler)
-from repro.memory.trace import (BankReport, ControllerReport, ReplayCore,
-                                TraceEvent, build_report, merge_traces,
-                                replay, replay_core)
+from repro.memory.trace import (REPLAY_BACKENDS, BankReport,
+                                ControllerReport, ReplayCore, TraceEvent,
+                                build_report, merge_traces, replay,
+                                replay_core, resolve_backend)
 
 __all__ = [
     "ALLOC_POLICIES", "Allocator", "BankGeometry", "BankReport", "BankState",
     "ControllerReport", "Placement", "PulsePlacement",
-    "REFRESH_GRANULARITIES", "REFRESH_POLICIES",
+    "REFRESH_GRANULARITIES", "REFRESH_POLICIES", "REPLAY_BACKENDS",
     "RefreshDecision", "RefreshScheduler", "ReplayCore", "TraceEvent",
     "build_report", "merge_traces", "port_service_s", "replay",
-    "replay_core",
+    "replay_core", "resolve_backend",
 ]

@@ -120,6 +120,9 @@ class BankState:
         # port busy intervals [(start_s, end_s), ...] recorded by the
         # timeline model's closed-loop walk; kept sorted and merged
         self._busy: list[tuple[float, float]] = []
+        # vector-backend storage: sorted/merged float64 arrays standing
+        # in for _busy (set_busy_arrays); None on the reference path
+        self._busy_arrays = None
         # optional observability hook: called as (bank, now) after every
         # occupancy change (allocate/free).  The flight recorder
         # (repro.obs) samples its per-bank occupancy counter here; when
@@ -134,21 +137,57 @@ class BankState:
         are merged in place."""
         if end <= start:
             return
+        if self._busy_arrays is not None:
+            raise RuntimeError(
+                "bank busy intervals are array-backed (vector replay); "
+                "occupy_port is a reference-walk API")
         if self._busy and start <= self._busy[-1][1]:
             s, e = self._busy[-1]
             self._busy[-1] = (s, max(e, end))
         else:
             self._busy.append((start, end))
 
+    def set_busy_arrays(self, starts, ends) -> None:
+        """Install the merged port-busy spans as sorted float64 arrays
+        (the vector backend's representation).  Every busy-interval query
+        (``busy_s`` / ``busy_intervals`` / ``idle_window`` / ``idle_gaps``)
+        reads through to them, element-for-element identical to the tuple
+        list ``occupy_port`` would have built."""
+        self._busy_arrays = (starts, ends)
+
+    def busy_arrays(self):
+        """The busy spans as a ``(starts, ends)`` float64 array pair —
+        built on the fly when the bank was walked by the reference path."""
+        import numpy as np
+        if self._busy_arrays is not None:
+            return self._busy_arrays
+        starts = np.array([s for s, _ in self._busy], dtype=np.float64)
+        ends = np.array([e for _, e in self._busy], dtype=np.float64)
+        return starts, ends
+
+    def _iter_busy(self):
+        if self._busy_arrays is not None:
+            starts, ends = self._busy_arrays
+            return zip(starts.tolist(), ends.tolist())
+        return iter(self._busy)
+
     @property
     def busy_s(self) -> float:
         """Total port-busy time (s) recorded by the timeline walk."""
+        if self._busy_arrays is not None:
+            import numpy as np
+            starts, ends = self._busy_arrays
+            if not len(starts):
+                return 0
+            # cumsum is a sequential left fold — bit-identical to the
+            # reference generator sum over the tuple list
+            return float(np.cumsum(ends - starts)[-1])
         return sum(e - s for s, e in self._busy)
 
     @property
     def busy_intervals(self) -> tuple:
         """The merged ``(start_s, end_s)`` port-busy spans, sorted."""
-        return tuple(self._busy)
+        return tuple(self._iter_busy())
 
     def idle_window(self, lo: float, hi: float,
                     need_s: float) -> float | None:
@@ -161,7 +200,7 @@ class BankState:
         if lo + need_s > hi:
             return None
         t = lo
-        for s, e in self._busy:
+        for s, e in self._iter_busy():
             if e <= t:
                 continue
             if s >= hi:
@@ -182,7 +221,7 @@ class BankState:
         if hi <= lo:
             return gaps
         t = lo
-        for s, e in self._busy:
+        for s, e in self._iter_busy():
             if e <= t:
                 continue
             if s >= hi:

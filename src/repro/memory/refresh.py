@@ -268,7 +268,8 @@ class RefreshScheduler:
                 freq_hz: float, refresh_read_pj_per_bit: float,
                 refresh_restore_pj_per_bit: float,
                 lifetime_scale: float = 1.0,
-                placements: Optional[dict] = None) -> list[RefreshDecision]:
+                placements: Optional[dict] = None,
+                pulse_stats: Optional[dict] = None) -> list[RefreshDecision]:
         """Charge refresh energy/stalls for one iteration of ``duration_s``.
 
         Args:
@@ -288,6 +289,11 @@ class RefreshScheduler:
                 stalls instead of full per-pulse serialization, and the
                 energy of hidden pulses is surfaced as
                 ``refresh_hidden_j``.
+            pulse_stats: vector-backend alternative to ``placements``:
+                ``{bank index: (count, stall_s, hidden)}`` pre-reduced
+                from ``repro.memory.vector.BankPulses`` (same left-fold
+                sums the placement branch would compute).  Ignored when
+                ``placements`` is given.
 
         Returns:
             One :class:`RefreshDecision` per bank (energy in **J**,
@@ -328,7 +334,17 @@ class RefreshScheduler:
                 restore_j = bit_intervals * refresh_restore_pj_per_bit * 1e-12
                 pulses = None if placements is None \
                     else placements.get(b.index, [])
-                if pulses is None:
+                if pulses is None and pulse_stats is not None:
+                    # the vector backend's pre-reduced placement totals —
+                    # identical to the placements branch below, which
+                    # computes the same folds from the placement list
+                    count, stall, hidden = pulse_stats.get(
+                        b.index, (0, 0.0, 0))
+                    if count:
+                        hidden_j = (read_j + restore_j) * hidden / count
+                    if self.granularity == "row":
+                        rows = count
+                elif pulses is None:
                     # additive model: each retention tick serializes the
                     # ports for the bank's full resident words — the row
                     # pulses of one tick sum to the same port time, so

@@ -27,6 +27,30 @@ from repro.memory.allocator import Allocator
 from repro.memory.banks import BankGeometry, port_service_s
 from repro.memory.refresh import RefreshScheduler
 
+# trace-replay engines: "python" is the scalar reference walk below;
+# "vector" is the numpy interval engine (repro.memory.vector), bit-
+# identical on every report field and ~an order of magnitude faster on
+# long traces.
+REPLAY_BACKENDS = ("python", "vector")
+
+
+def resolve_backend(backend: str, recorder=None) -> str:
+    """Validate ``backend`` and resolve it against the recorder: span
+    recording observes the scalar walk's side effects (per-event
+    occupancy counters, spill spans), which the vector engine batches
+    away — so a recorder downgrades ``"vector"`` to the reference path
+    with a logged warning rather than silently dropping observability."""
+    if backend not in REPLAY_BACKENDS:
+        raise ValueError(f"unknown replay backend {backend!r}; "
+                         f"choose from {REPLAY_BACKENDS}")
+    if backend == "vector" and recorder is not None:
+        from repro.obs import log as obslog
+        obslog.warn("replay_backend_downgrade", requested="vector",
+                    used="python",
+                    reason="span_recording_needs_reference_walk")
+        return "python"
+    return backend
+
 
 def merge_traces(fwd, bwd) -> tuple[list[TraceEvent], dict, float]:
     """Concatenate forward + backward ``SimResult`` traces onto one
@@ -169,6 +193,10 @@ class ReplayCore:
     op_read_words: dict            # op name -> {bank index: words}
     op_write_words: dict
     restore_j: float = 0.0         # read-triggered restore share of read_j
+    # vector-backend attachment (repro.memory.vector.VectorState): sparse
+    # per-(op, bank) word arrays the vectorized closed-loop walk consumes
+    # directly; None when the reference walk built this core
+    vector: object = None
 
 
 def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
@@ -181,7 +209,8 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 retention_s: Optional[float] = None,
                 granularity: str = "bank",
                 reads_restore: bool = False,
-                recorder=None) -> ReplayCore:
+                recorder=None,
+                backend: str = "python") -> ReplayCore:
     """Walk ``events`` through allocator placement and traffic-energy
     accounting; returns the :class:`ReplayCore` a stall model finishes.
 
@@ -212,7 +241,21 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     a cumulative ``traffic_j`` counter at each energy-charging event.
     Observation only — placement, energies, and every counter the
     report reads are bit-identical with or without it.
+
+    ``backend`` selects the replay engine (``REPLAY_BACKENDS``):
+    ``"python"`` is this scalar walk; ``"vector"`` delegates to the
+    numpy interval engine (``repro.memory.vector``), which returns a
+    bit-identical core — a recorder downgrades it back to the reference
+    walk (see :func:`resolve_backend`).
     """
+    if resolve_backend(backend, recorder) == "vector":
+        from repro.memory import vector as vec
+        return vec.replay_core_vector(
+            events, cfg, temp_c=temp_c, duration_s=duration_s,
+            refresh_policy=refresh_policy, alloc_policy=alloc_policy,
+            freq_hz=freq_hz, sample_scale=sample_scale,
+            refresh_guard=refresh_guard, retention_s=retention_s,
+            granularity=granularity, reads_restore=reads_restore)
     geom = BankGeometry.from_edram(cfg)
     sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
                              retention_s=retention_s,
@@ -425,7 +468,8 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
            retention_s: Optional[float] = None,
            granularity: str = "bank",
            reads_restore: bool = False,
-           recorder=None) -> ControllerReport:
+           recorder=None,
+           backend: str = "python") -> ControllerReport:
     """Replay ``events`` through the bank-level controller with the
     **additive** stall model (the cross-validation baseline; the
     closed-loop model lives in ``repro.sim.timeline``).
@@ -463,6 +507,10 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             the additive model places no pulses, so the trace carries no
             refresh spans and cannot be reconciled (use the timeline
             model for that).
+        backend: replay engine (``REPLAY_BACKENDS``) — ``"python"``
+            (the scalar reference walk) or ``"vector"`` (the numpy
+            interval engine, bit-identical reports); a recorder
+            downgrades ``"vector"`` (see :func:`resolve_backend`).
 
     Returns:
         A :class:`ControllerReport` (energies in J, stalls in s) with
@@ -474,7 +522,7 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
         granularity=granularity, reads_restore=reads_restore,
-        recorder=recorder)
+        recorder=recorder, backend=backend)
     if recorder is not None:
         recorder.meta.update(timing="additive", schedule_s=duration_s,
                              granularity=granularity, temp_c=temp_c,

@@ -1,0 +1,930 @@
+"""Vectorized trace replay (`backend="vector"`) — the numpy interval
+engine behind the ``replay_core`` seam.
+
+The reference backend (``repro.memory.trace.replay_core`` + the walks in
+``repro.sim.timeline`` / ``RefreshScheduler.place_pulses``) is a scalar
+event loop: per-event bank mutation, per-(op, bank) port accounting,
+per-pulse gap search.  This module re-derives the same results from
+whole-trace arrays:
+
+* **Lean decision walk** — allocator placement decisions (striping,
+  spills, ping-pong rotation) are genuinely sequential, so a slim Python
+  pass makes exactly the reference decisions over local int state, but
+  *records* its side effects (occupancy deltas, residency durations,
+  per-event traffic classes) instead of mutating ``BankState``.
+* **Deferred vectorized accounting** — traffic energies, per-bank
+  occupancy integrals (∫occ·dt), residency maxima, and the per-op
+  per-bank word tables are then reduced over the recorded arrays.
+* **Vectorized closed-loop walk** — op pushback is a ``cumsum`` over
+  per-op step lengths; per-bank busy intervals come out as merged,
+  sorted float64 arrays (installed via ``BankState.set_busy_arrays``).
+* **Vectorized pulse placement** — bank-granular idle-window queries
+  become ``searchsorted`` over the busy arrays; row-granular packing
+  walks gaps with per-gap ``cumsum`` cursor chains.
+
+**Bit-identical by construction.**  Every float produced here replays
+the reference backend's arithmetic operation-for-operation: ``cumsum``
+is a sequential left fold (matching ``+=`` accumulation), ``rint``
+matches ``round()`` (half-even), elementwise array ops match Python
+float ops, and max/integer reductions are order-free and exact.  Where
+the reference compares in a specific *form* (``s - t >= need`` vs
+``t + need > hi`` in ``BankState.idle_window``) the same form is kept.
+``tests/test_replay_backends.py`` fuzzes the equality; the golden suite
+pins it across the Fig-24 / serving arms.
+
+Not carried over: the vector allocator does not retain per-tensor
+``Placement`` objects on ``Allocator.placements`` after the walk (the
+reports never read them), and span recording (``repro.obs``) always
+runs on the reference walk — ``trace.resolve_backend`` downgrades a
+vector request with a logged warning when a recorder is attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import edram as ed
+from repro.core.schedule import EVENT_KINDS
+from repro.memory.allocator import Allocator
+from repro.memory.banks import BankGeometry, BankState
+from repro.memory.refresh import PulsePlacement, RefreshScheduler
+
+# traffic class codes recorded per event by the decision walk
+_NONE, _W_ON, _W_OFF, _R_ON, _R_OFF = 0, 1, 2, 3, 4
+
+
+def _seqsum(a: np.ndarray) -> float:
+    """Sequential left-fold sum — bit-identical to ``+=`` accumulation
+    in array order (``np.cumsum`` is sequential; ``np.sum`` is pairwise
+    and must not be used on floats here)."""
+    return float(np.cumsum(a)[-1]) if a.size else 0.0
+
+
+def _expand_csr(starts: np.ndarray, counts: np.ndarray):
+    """Flat gather indices for variable-length spans: returns
+    ``(rep, flat)`` where ``rep[j]`` is the source row of flat slot ``j``
+    and ``flat[j]`` indexes the CSR value arrays."""
+    total = int(counts.sum())
+    rep = np.repeat(np.arange(len(counts)), counts)
+    base = np.cumsum(counts) - counts
+    offs = np.arange(total) - np.repeat(base, counts)
+    return rep, starts[rep] + offs
+
+
+class LazyOpTable:
+    """Dict-compatible per-op per-bank word table, materialized on first
+    access (the vector timeline path reads the sparse arrays directly
+    and never pays for the dict)."""
+
+    def __init__(self, builder):
+        self._builder = builder
+        self._d: Optional[dict] = None
+
+    def _mat(self) -> dict:
+        if self._d is None:
+            self._d = self._builder()
+            self._builder = None
+        return self._d
+
+    def get(self, key, default=None):
+        return self._mat().get(key, default)
+
+    def items(self):
+        return self._mat().items()
+
+    def keys(self):
+        return self._mat().keys()
+
+    def values(self):
+        return self._mat().values()
+
+    def __getitem__(self, key):
+        return self._mat()[key]
+
+    def __iter__(self):
+        return iter(self._mat())
+
+    def __len__(self):
+        return len(self._mat())
+
+    def __bool__(self):
+        return bool(self._mat())
+
+    def __contains__(self, key):
+        return key in self._mat()
+
+    def __eq__(self, other):
+        if isinstance(other, LazyOpTable):
+            other = other._mat()
+        return self._mat() == other
+
+
+@dataclasses.dataclass
+class VectorState:
+    """Sparse per-(op, bank) word tables + op interning, attached to a
+    vector-built ``ReplayCore`` (``core.vector``) for the vectorized
+    closed-loop walk."""
+    n_banks: int
+    op_index: dict                 # op name -> op id
+    # sorted unique keys (op_id * n_banks + bank) and summed words
+    r_keys: np.ndarray
+    r_words: np.ndarray
+    w_keys: np.ndarray
+    w_words: np.ndarray
+
+
+def _op_table_builder(keys: np.ndarray, words: np.ndarray,
+                      first: np.ndarray, op_names: list, n_banks: int):
+    """Materialize the reference backend's insertion-ordered
+    ``{op: {bank: words}}`` dict: (op, bank) pairs enter in first-touch
+    order, which reproduces both dict levels' key order exactly."""
+    def build() -> dict:
+        table: dict = {}
+        order = np.argsort(first, kind="stable")
+        ops = (keys // n_banks)[order].tolist()
+        banks = (keys % n_banks)[order].tolist()
+        vals = words[order].tolist()
+        for op_id, bank, w in zip(ops, banks, vals):
+            table.setdefault(op_names[op_id], {})[bank] = w
+        return table
+    return build
+
+
+def replay_core_vector(events: Sequence, cfg, *, temp_c: float,
+                       duration_s: float,
+                       refresh_policy: str = "selective",
+                       alloc_policy: str = "pingpong",
+                       freq_hz: float = 500e6,
+                       sample_scale: float = 1.0,
+                       refresh_guard: float = 1.0,
+                       retention_s: Optional[float] = None,
+                       granularity: str = "bank",
+                       reads_restore: bool = False):
+    """Vector-backend twin of :func:`repro.memory.trace.replay_core` —
+    same contract, bit-identical ``ReplayCore``; the returned core
+    additionally carries ``core.vector`` (a :class:`VectorState`)."""
+    from repro.memory import trace as mtr
+
+    geom = BankGeometry.from_edram(cfg)
+    sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
+                             retention_s=retention_s,
+                             granularity=granularity)
+    alloc = Allocator(geom, policy=alloc_policy,
+                      retention_s=sched.retention_s)
+    n_banks = geom.n_banks
+    words_for = geom.words_for
+    word_bits = geom.word_bits
+
+    # -- intern the event stream into parallel lists ---------------------
+    n_ev = len(events)
+    kinds: list = [None] * n_ev
+    tids = [0] * n_ev
+    opids = [0] * n_ev
+    times = [0.0] * n_ev
+    bits_l = [0.0] * n_ev
+    buffered = [False] * n_ev
+    t_index: dict = {}
+    t_names: list = []
+    op_index: dict = {}
+    op_names: list = []
+    for i, ev in enumerate(events):
+        k = ev.kind
+        if k not in EVENT_KINDS:
+            raise ValueError(f"unknown trace event kind {k!r}")
+        kinds[i] = k
+        t = t_index.get(ev.tensor)
+        if t is None:
+            t = t_index[ev.tensor] = len(t_names)
+            t_names.append(ev.tensor)
+        tids[i] = t
+        o = op_index.get(ev.op)
+        if o is None:
+            o = op_index[ev.op] = len(op_names)
+            op_names.append(ev.op)
+        opids[i] = o
+        times[i] = ev.time
+        bits_l[i] = ev.bits
+        buffered[i] = ev.buffered
+    n_t = len(t_names)
+
+    # -- prepass 1: expected residency window per tensor ------------------
+    first_seen = [None] * n_t
+    win = [0.0] * n_t
+    haswin = [False] * n_t
+    for i in range(n_ev):
+        k = kinds[i]
+        t = tids[i]
+        if k in ("alloc", "write"):
+            if first_seen[t] is None:
+                first_seen[t] = times[i]
+        elif k in ("free", "evict") and first_seen[t] is not None:
+            w = times[i] - first_seen[t]
+            first_seen[t] = None
+            win[t] = max(win[t], w) if haswin[t] else max(0.0, w)
+            haswin[t] = True
+    for t in range(n_t):
+        if first_seen[t] is not None:
+            w = duration_s - first_seen[t]
+            win[t] = max(win[t], w) if haswin[t] else max(0.0, w)
+            haswin[t] = True
+
+    # -- prepass 2: peak streamed (non-buffered) working set --------------
+    live_w = [0] * n_t
+    live = [False] * n_t
+    transient_peak = cur_w = 0
+    # the reference main walk multiplies by the reciprocal; this prepass
+    # divides — keep each form (they can differ in the last ulp)
+    inv_scale = 1.0 / sample_scale
+    for i in range(n_ev):
+        if buffered[i]:
+            continue
+        k = kinds[i]
+        t = tids[i]
+        if k in ("alloc", "write"):
+            if not live[t]:
+                w = words_for(bits_l[i] / sample_scale)
+                live[t] = True
+                live_w[t] = w
+                cur_w += w
+                if cur_w > transient_peak:
+                    transient_peak = cur_w
+        elif k in ("free", "evict") and live[t]:
+            live[t] = False
+            cur_w -= live_w[t]
+
+    # -- decision walk ----------------------------------------------------
+    # Makes the reference allocator's placement decisions over local int
+    # state; bank-side effects are recorded, not applied.
+    lifetime = alloc_policy == "lifetime"
+    retention = sched.retention_s
+    words_per_bank = geom.words_per_bank
+    free_w = [words_per_bank] * n_banks
+    total_free = words_per_bank * n_banks
+    bank_ids = list(range(n_banks))
+    # ping-pong visit orders, precomputed per rotation
+    rotations = [bank_ids[r:] + bank_ids[:r] for r in range(n_banks)]
+    resident: list = [set() for _ in range(n_banks)] if lifetime else None
+
+    placed_pid = [-1] * n_t        # current placement id per tensor
+    pid_banks: list = []           # tuple of bank indices per pid
+    pid_words: list = []           # tuple of span words per pid
+    pid_sumw: list = []            # span words total (int)
+    pid_write_t: list = []         # residency write time (s)
+    pid_scale: list = []           # residency lifetime scale
+    pid_expected: list = []        # expected lifetime (s) or None
+
+    occ_bank: list = []            # occupancy delta records, walk order
+    occ_time: list = []
+    occ_delta: list = []
+    res_pid: list = []             # residency-duration records
+    res_dur: list = []
+    ev_class = [0] * n_ev          # traffic class per event
+    ev_pid = [-1] * n_ev
+    spill_bits_l: list = []        # scaled bits per spill, walk order
+    spilled: list = []
+    evicted: list = []
+    transient_now = 0
+    next_bank = 0
+
+    def _place(tid: int, bits: float, now: float, expected, lscale: float,
+               reserve: int) -> int:
+        nonlocal total_free, next_bank
+        need = words_for(bits)
+        if alloc_policy == "pingpong":
+            tiers = [rotations[next_bank]]
+        elif alloc_policy == "first_fit":
+            tiers = [bank_ids]
+        else:
+            short = (retention is None or expected is None
+                     or expected < retention)
+            match_t: list = []
+            other: list = []
+            empty: list = []
+            for b in range(n_banks):
+                res = resident[b]
+                if not res:
+                    empty.append(b)
+                    continue
+                bank_short = all(
+                    pid_expected[placed_pid[t]] is None
+                    or retention is None
+                    or pid_expected[placed_pid[t]] < retention
+                    for t in res)
+                (match_t if bank_short == short else other).append(b)
+            tiers = [match_t, empty, other]
+        pid = len(pid_banks)
+        if need > total_free - max(0, reserve):
+            spill_bits_l.append(bits)
+            spilled.append(t_names[tid])
+            pid_banks.append(())
+            pid_words.append(())
+            pid_sumw.append(0)
+            pid_write_t.append(now)
+            pid_scale.append(lscale)
+            pid_expected.append(expected)
+            return pid
+        long_lived = (lifetime and retention is not None
+                      and expected is not None and expected >= retention)
+        takes: dict = {}
+        remaining = need
+        for tier in tiers:
+            if remaining == 0:
+                break
+            if alloc_policy == "first_fit" or long_lived:
+                for b in tier:
+                    if remaining == 0:
+                        break
+                    fw = free_w[b]
+                    take = fw if fw < remaining else remaining
+                    if take:
+                        takes[b] = take
+                        remaining -= take
+            else:
+                while remaining > 0:
+                    active = [b for b in tier
+                              if free_w[b] > takes.get(b, 0)]
+                    if not active:
+                        break
+                    share = -(-remaining // len(active))
+                    for b in active:
+                        room = free_w[b] - takes.get(b, 0)
+                        take = share if share < room else room
+                        if take > remaining:
+                            take = remaining
+                        if take:
+                            takes[b] = takes.get(b, 0) + take
+                            remaining -= take
+                        if remaining == 0:
+                            break
+        spans_b: list = []
+        spans_w: list = []
+        for tier in tiers:
+            for b in tier:
+                w = takes.get(b)
+                if w:
+                    spans_b.append(b)
+                    spans_w.append(w)
+                    free_w[b] -= w
+                    occ_bank.append(b)
+                    occ_time.append(now)
+                    occ_delta.append(w)
+                    if lifetime:
+                        resident[b].add(tid)
+        if alloc_policy == "pingpong" and spans_b:
+            next_bank = (spans_b[0] + 1) % n_banks
+        sumw = need - remaining
+        total_free -= sumw
+        pid_banks.append(tuple(spans_b))
+        pid_words.append(tuple(spans_w))
+        pid_sumw.append(sumw)
+        pid_write_t.append(now)
+        pid_scale.append(lscale)
+        pid_expected.append(expected)
+        return pid
+
+    for i in range(n_ev):
+        k = kinds[i]
+        t = tids[i]
+        tm = times[i]
+        buf = buffered[i]
+        scale = 1.0 if buf else inv_scale
+        if k in ("alloc", "write"):
+            pid = placed_pid[t]
+            if pid >= 0:
+                if pid_banks[pid]:       # off-chip placements have no
+                    res_pid.append(pid)  # residency clock to restart
+                    res_dur.append((tm - pid_write_t[pid]) * pid_scale[pid])
+                    pid_write_t[pid] = tm
+            else:
+                w = win[t] if haswin[t] else None
+                reserve = (max(0, transient_peak - transient_now)
+                           if buf else 0)
+                pid = _place(t, bits_l[i] * scale, tm,
+                             None if w is None else w * scale, scale,
+                             reserve)
+                placed_pid[t] = pid
+                if not buf and pid_banks[pid]:
+                    transient_now += pid_sumw[pid]
+            if k == "write":
+                if pid_banks[pid]:
+                    ev_class[i] = _W_ON
+                    ev_pid[i] = pid
+                else:
+                    ev_class[i] = _W_OFF
+        elif k == "read":
+            pid = placed_pid[t]
+            if pid < 0 or not pid_banks[pid]:
+                ev_class[i] = _R_OFF
+            else:
+                ev_class[i] = _R_ON
+                ev_pid[i] = pid
+                if reads_restore:
+                    res_pid.append(pid)
+                    res_dur.append((tm - pid_write_t[pid]) * pid_scale[pid])
+                    pid_write_t[pid] = tm
+        else:                            # free | evict
+            pid = placed_pid[t]
+            if not buf and pid >= 0 and pid_banks[pid]:
+                transient_now -= pid_sumw[pid]
+            if k == "evict" and pid >= 0:
+                evicted.append(t_names[t])
+            if pid >= 0:
+                if pid_banks[pid]:
+                    res_pid.append(pid)
+                    res_dur.append((tm - pid_write_t[pid]) * pid_scale[pid])
+                    for b, w in zip(pid_banks[pid], pid_words[pid]):
+                        free_w[b] += w
+                        occ_bank.append(b)
+                        occ_time.append(tm)
+                        occ_delta.append(-w)
+                        if lifetime:
+                            resident[b].discard(t)
+                    total_free += pid_sumw[pid]
+                placed_pid[t] = -1
+
+    # finalize: still-placed tensors live until the trace end
+    for t in range(n_t):
+        pid = placed_pid[t]
+        if pid >= 0 and pid_banks[pid]:
+            res_pid.append(pid)
+            res_dur.append((duration_s - pid_write_t[pid]) * pid_scale[pid])
+
+    # -- deferred vectorized accounting ----------------------------------
+    bits_a = np.asarray(bits_l, dtype=np.float64)
+    times_a = np.asarray(times, dtype=np.float64)
+    cls = np.asarray(ev_class, dtype=np.int8)
+    pids_a = np.asarray(ev_pid, dtype=np.int64)
+    opids_a = np.asarray(opids, dtype=np.int64)
+
+    # traffic energies: zero contributions are exact identities under the
+    # sequential fold, so masking via where() preserves the reference
+    # accumulation order
+    w_on = cls == _W_ON
+    r_on = cls == _R_ON
+    off = (cls == _W_OFF) | (cls == _R_OFF)
+    zeros = np.zeros(n_ev)
+    write_j = _seqsum(np.where(
+        w_on, bits_a * cfg.write_pj_per_bit * 1e-12, zeros))
+    read_pj = cfg.read_pj_per_bit
+    if reads_restore:
+        read_pj = read_pj + cfg.refresh_restore_pj
+    read_j = _seqsum(np.where(r_on, bits_a * read_pj * 1e-12, zeros))
+    restore_j = _seqsum(np.where(
+        r_on, bits_a * cfg.refresh_restore_pj * 1e-12, zeros)) \
+        if reads_restore else 0.0
+    offchip_j = _seqsum(np.where(
+        off, bits_a * cfg.dram_pj_per_bit * 1e-12, zeros))
+    offchip_bits = _seqsum(np.where(off, bits_a, zeros))
+
+    # pid span CSR
+    n_pid = len(pid_banks)
+    span_counts = np.asarray([len(b) for b in pid_banks], dtype=np.int64)
+    span_indptr = np.concatenate(([0], np.cumsum(span_counts)))
+    span_bank = np.asarray(
+        [b for bs in pid_banks for b in bs], dtype=np.int64)
+    span_words = np.asarray(
+        [w for ws in pid_words for w in ws], dtype=np.int64)
+    pid_sumw_a = np.asarray(pid_sumw, dtype=np.int64)
+
+    def _per_bank_traffic(mask: np.ndarray) -> np.ndarray:
+        """Per-bank ``bits / n_spans`` traffic sums, bank-major with the
+        reference event order inside each bank (np.bincount accumulates
+        sequentially in input order)."""
+        idx = np.flatnonzero(mask)
+        if not idx.size:
+            return np.zeros(n_banks)
+        p = pids_a[idx]
+        counts = span_counts[p]
+        rep, flat = _expand_csr(span_indptr[p], counts)
+        contrib = (bits_a[idx] / np.maximum(1, counts))[rep]
+        return np.bincount(span_bank[flat], weights=contrib,
+                           minlength=n_banks)
+
+    bank_write_bits = _per_bank_traffic(w_on)
+    bank_read_bits = _per_bank_traffic(r_on)
+
+    # per-(op, bank) word tables (sparse, summed; int-exact)
+    def _op_table(mask: np.ndarray):
+        idx = np.flatnonzero(mask)
+        if not idx.size:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, z
+        p = pids_a[idx]
+        counts = span_counts[p]
+        rep, flat = _expand_csr(span_indptr[p], counts)
+        eb = bits_a[idx]
+        words_ev = np.where(
+            eb > 0,
+            np.maximum(1, np.ceil(eb / word_bits)).astype(np.int64),
+            0).astype(np.int64)
+        span_total = np.maximum(1, pid_sumw_a[p])
+        per_span = np.maximum(1, np.rint(
+            (words_ev[rep] * span_words[flat])
+            / span_total[rep])).astype(np.int64)
+        keys = opids_a[idx][rep] * n_banks + span_bank[flat]
+        uk, first, inv = np.unique(keys, return_index=True,
+                                   return_inverse=True)
+        sums = np.bincount(inv, weights=per_span.astype(
+            np.float64)).astype(np.int64)
+        return uk, sums, first
+
+    w_keys, w_words, w_first = _op_table(w_on)
+    r_keys, r_words, r_first = _op_table(r_on)
+
+    # per-bank occupancy integral / peak / residency maxima
+    occ_bank_a = np.asarray(occ_bank, dtype=np.int64)
+    occ_time_a = np.asarray(occ_time, dtype=np.float64)
+    occ_delta_a = np.asarray(occ_delta, dtype=np.int64)
+    order = np.argsort(occ_bank_a, kind="stable")
+    ob, ot, od = occ_bank_a[order], occ_time_a[order], occ_delta_a[order]
+    seg = np.searchsorted(ob, np.arange(n_banks + 1))
+    occ_bit_s = [0.0] * n_banks
+    peak_words = [0] * n_banks
+    used_final = [0] * n_banks
+    last_t = [0.0] * n_banks
+    for b in range(n_banks):
+        lo, hi = int(seg[b]), int(seg[b + 1])
+        t_b = ot[lo:hi]
+        d_b = od[lo:hi]
+        used_after = np.cumsum(d_b)
+        used_before = used_after - d_b
+        # the reference advance() only moves time forward: its _last_t
+        # chain is the running max of the event times (from 0.0)
+        run = np.maximum.accumulate(np.concatenate(([0.0], t_b)))
+        dt = t_b - run[:-1]
+        contrib = np.where(
+            dt > 0, (used_before * word_bits).astype(np.float64) * dt, 0.0)
+        total = _seqsum(contrib)
+        # finalize(duration_s): one last advance at the trace end
+        end_last = float(run[-1])
+        used_end = int(used_after[-1]) if hi > lo else 0
+        if duration_s > end_last:
+            total = total + used_end * word_bits * (duration_s - end_last)
+            end_last = duration_s
+        occ_bit_s[b] = total
+        used_final[b] = used_end
+        last_t[b] = end_last
+        alloc_mask = d_b > 0
+        peak_words[b] = int(used_after[alloc_mask].max()) \
+            if alloc_mask.any() else 0
+
+    max_resident = np.zeros(n_banks)
+    if res_pid:
+        rp = np.asarray(res_pid, dtype=np.int64)
+        rd = np.asarray(res_dur, dtype=np.float64)
+        counts = span_counts[rp]
+        rep, flat = _expand_csr(span_indptr[rp], counts)
+        np.maximum.at(max_resident, span_bank[flat], rd[rep])
+
+    # -- populate the real Allocator/BankState objects --------------------
+    alloc.spill_bits = float(sum(spill_bits_l))
+    alloc.spilled = spilled
+    alloc.evicted = evicted
+    alloc._next_bank = next_bank
+    for b in alloc.banks:
+        i = b.index
+        b.read_bits = float(bank_read_bits[i])
+        b.write_bits = float(bank_write_bits[i])
+        b.peak_words = peak_words[i]
+        b.used_words = used_final[i]
+        b.max_resident_s = float(max_resident[i])
+        b.occ_bit_s = float(occ_bit_s[i])
+        b._last_t = last_t[i]
+
+    state = VectorState(n_banks=n_banks, op_index=op_index,
+                        r_keys=r_keys, r_words=r_words,
+                        w_keys=w_keys, w_words=w_words)
+    return mtr.ReplayCore(
+        cfg=cfg, geom=geom, sched=sched, alloc=alloc,
+        refresh_policy=refresh_policy, alloc_policy=alloc_policy,
+        temp_c=temp_c, duration_s=duration_s, freq_hz=freq_hz,
+        read_j=read_j, write_j=write_j, offchip_j=offchip_j,
+        offchip_bits=offchip_bits,
+        op_read_words=LazyOpTable(_op_table_builder(
+            r_keys, r_words, r_first, op_names, n_banks)),
+        op_write_words=LazyOpTable(_op_table_builder(
+            w_keys, w_words, w_first, op_names, n_banks)),
+        restore_j=restore_j, vector=state)
+
+
+# -- closed-loop walk --------------------------------------------------
+
+
+def closed_loop_walk_vector(core, op_schedule) -> float:
+    """Vector twin of :func:`repro.sim.timeline.closed_loop_walk`: the
+    op pushback chain is a ``cumsum`` over per-op steps; per-bank busy
+    intervals are merged into sorted arrays and installed on each
+    ``BankState`` via :meth:`set_busy_arrays`.  Returns the makespan."""
+    st: VectorState = core.vector
+    n_banks = st.n_banks
+    freq_hz = core.freq_hz
+    banks = core.alloc.banks
+
+    n = len(op_schedule)
+    starts0 = np.fromiter((s for _, s, _ in op_schedule), np.float64, n)
+    ends0 = np.fromiter((e for _, _, e in op_schedule), np.float64, n)
+    dur = ends0 - starts0
+    keep = dur > 0.0
+    if not keep.any():
+        for b in banks:
+            b.set_busy_arrays(np.zeros(0), np.zeros(0))
+        return 0.0
+    op_ids = np.fromiter(
+        (st.op_index.get(name, -1) for name, _, _ in op_schedule),
+        np.int64, n)[keep]
+    dur = dur[keep]
+    n_ops = len(st.op_index)
+
+    # combined per-(op, bank) word max: the reference occupies the read
+    # and write services as two same-start intervals whose merge keeps
+    # the longer — max(fl(w_r/f), fl(w_w/f)) == fl(max(w_r, w_w)/f)
+    allk = np.concatenate((st.r_keys, st.w_keys))
+    allw = np.concatenate((st.r_words, st.w_words))
+    uk, inv = np.unique(allk, return_inverse=True)
+    wmax = np.zeros(len(uk), dtype=np.int64)
+    np.maximum.at(wmax, inv, allw)
+
+    # per-op slowest port (words): indexes into an n_ops+1 array so the
+    # unknown-op sentinel -1 reads the trailing zero
+    op_peak = np.zeros(n_ops + 1, dtype=np.int64)
+    if len(uk):
+        np.maximum.at(op_peak, uk // n_banks, wmax)
+        op_peak[n_ops] = 0
+    peak_words = op_peak[op_ids]
+    busy_max = peak_words / freq_hz if freq_hz > 0 \
+        else np.zeros(len(peak_words))
+
+    steps = np.maximum(dur, busy_max)
+    t_ends = np.cumsum(steps)
+    op_starts = np.concatenate(([0.0], t_ends[:-1]))
+    makespan = float(t_ends[-1])
+
+    # per-(scheduled op, bank) busy intervals
+    if len(uk) and freq_hz > 0:
+        key_lo = np.searchsorted(uk, op_ids * n_banks)
+        key_hi = np.searchsorted(uk, (op_ids + 1) * n_banks)
+        counts = key_hi - key_lo
+        rep, flat = _expand_csr(key_lo, counts)
+        words_f = wmax[flat]
+        nz = words_f > 0
+        rep, flat, words_f = rep[nz], flat[nz], words_f[nz]
+        iv_bank = uk[flat] % n_banks
+        iv_start = op_starts[rep]
+        iv_end = iv_start + words_f / freq_hz
+    else:
+        iv_bank = np.zeros(0, dtype=np.int64)
+        iv_start = iv_end = np.zeros(0)
+
+    order = np.argsort(iv_bank, kind="stable")
+    ib, istart, iend = iv_bank[order], iv_start[order], iv_end[order]
+    seg = np.searchsorted(ib, np.arange(n_banks + 1))
+    for b in banks:
+        lo, hi = int(seg[b.index]), int(seg[b.index + 1])
+        s_b, e_b = istart[lo:hi], iend[lo:hi]
+        if not len(s_b):
+            b.set_busy_arrays(s_b, e_b)
+            continue
+        # merge: an interval starting at or before the running max end
+        # joins the previous group (occupy_port's `start <= last end`)
+        run_end = np.maximum.accumulate(e_b)
+        new_grp = np.empty(len(s_b), dtype=bool)
+        new_grp[0] = True
+        new_grp[1:] = s_b[1:] > run_end[:-1]
+        heads = np.flatnonzero(new_grp)
+        b.set_busy_arrays(s_b[heads], np.maximum.reduceat(e_b, heads))
+    return makespan
+
+
+# -- pulse placement ---------------------------------------------------
+
+
+@dataclasses.dataclass
+class BankPulses:
+    """One bank's pulse placements as parallel arrays (the vector form
+    of ``list[PulsePlacement]``); placement order matches the reference
+    scheduler (ticks ascending; rows then the preempting run)."""
+    bank: int
+    tick: np.ndarray
+    deadline: np.ndarray
+    start: np.ndarray
+    hidden: np.ndarray
+    stall: np.ndarray
+    row: np.ndarray
+    words: np.ndarray
+    rows: np.ndarray
+
+    @property
+    def count(self) -> int:
+        return int(self.rows.sum())
+
+    @property
+    def hidden_count(self) -> int:
+        return int(self.rows[self.hidden].sum())
+
+    @property
+    def stall_s(self) -> float:
+        # left fold in placement order (hidden zeros are exact
+        # identities under addition)
+        return sum(self.stall.tolist())
+
+    def to_placements(self) -> list:
+        """Materialize the exact ``PulsePlacement`` list the reference
+        ``place_pulses`` would return."""
+        return [PulsePlacement(bank=self.bank, index=k, deadline_s=d,
+                               start_s=s, hidden=h, stall_s=st, row=r,
+                               words=w, rows=rs)
+                for k, d, s, h, st, r, w, rs in zip(
+                    self.tick.tolist(), self.deadline.tolist(),
+                    self.start.tolist(), self.hidden.tolist(),
+                    self.stall.tolist(), self.row.tolist(),
+                    self.words.tolist(), self.rows.tolist())]
+
+
+def _empty_pulses(bank_idx: int) -> BankPulses:
+    zi = np.zeros(0, dtype=np.int64)
+    zf = np.zeros(0)
+    return BankPulses(bank=bank_idx, tick=zi, deadline=zf, start=zf,
+                      hidden=np.zeros(0, dtype=bool), stall=zf, row=zi,
+                      words=zi, rows=zi)
+
+
+def place_pulses_vector(sched: RefreshScheduler, bank: BankState,
+                        duration_s: float, freq_hz: float) -> BankPulses:
+    """Vector twin of :meth:`RefreshScheduler.place_pulses` over the
+    bank's busy arrays — bit-identical placements (fuzz-pinned)."""
+    if duration_s <= 0 or not math.isfinite(sched.interval_s):
+        return _empty_pulses(bank.index)
+    chunks = sched.pulse_chunks(bank)
+    if not chunks:
+        return _empty_pulses(bank.index)
+    from repro.memory.banks import port_service_s
+    widths = [port_service_s(w, freq_hz) for w in chunks]
+    interval = sched.interval_s
+    ticks = math.ceil(duration_s / interval)
+    ks = np.arange(1, ticks + 1, dtype=np.int64)
+    lo = (ks - 1) * interval
+    deadline = np.minimum(ks * interval, duration_s)
+    s_arr, e_arr = bank.busy_arrays()
+
+    if sched.granularity == "bank":
+        return _place_bank(sched, bank.index, chunks[0], widths[0], ks,
+                           lo, deadline, s_arr, e_arr)
+    return _place_rows(bank.index, chunks, widths, ks, lo, deadline,
+                       s_arr, e_arr)
+
+
+def _place_bank(sched, bank_idx, words, pulse_s, ks, lo, deadline,
+                s_arr, e_arr) -> BankPulses:
+    ticks = len(ks)
+    n = len(s_arr)
+    if pulse_s <= 0.0:
+        # idle_window: need_s <= 0 fits at lo whenever deadline >= lo
+        start = lo
+        hidden = deadline >= lo
+    else:
+        # replicate idle_window() over all ticks at once; comparison
+        # forms are kept verbatim (`s - t >= need` vs `t + need > hi`)
+        none0 = lo + pulse_s > deadline
+        j0 = np.searchsorted(e_arr, lo, side="right")
+        s_pad = np.concatenate((s_arr, [np.inf]))
+        # gap at the tick's lo fits, or the first busy starts past hi
+        at_lo = (s_pad[j0] >= deadline) | (s_pad[j0] - lo >= pulse_s)
+        if n:
+            # first post-busy gap that fits (tick-independent), walked
+            # from j0; the run of e_j candidates ends at the first busy
+            # starting past hi
+            gapfit = np.empty(n, dtype=bool)
+            gapfit[:-1] = (s_arr[1:] - e_arr[:-1]) >= pulse_s
+            gapfit[-1] = True
+            idx = np.arange(n)
+            nf = np.minimum.accumulate(
+                np.where(gapfit, idx, n)[::-1])[::-1]
+            j0c = np.minimum(j0, n - 1)
+            jg = nf[j0c]
+            jhi = np.searchsorted(s_arr, deadline, side="left")
+            j_ret = np.minimum(jg, np.maximum(j0c, jhi - 1))
+            cand = e_arr[j_ret]
+            found_after = cand + pulse_s <= deadline
+        else:
+            cand = lo
+            found_after = np.zeros(ticks, dtype=bool)
+        hidden = ~none0 & (at_lo | found_after)
+        start = np.where(at_lo, lo, cand)
+    out_start = np.where(hidden, start, deadline)
+    stall = np.where(hidden, 0.0, pulse_s)
+    return BankPulses(
+        bank=bank_idx, tick=ks, deadline=deadline, start=out_start,
+        hidden=hidden, stall=stall,
+        row=np.zeros(ticks, dtype=np.int64),
+        words=np.full(ticks, words, dtype=np.int64),
+        rows=np.ones(ticks, dtype=np.int64))
+
+
+def _place_rows(bank_idx, chunks, widths, ks, lo, deadline,
+                s_arr, e_arr) -> BankPulses:
+    """Row-granular packing: per tick, rows pack front-to-back into the
+    tick's idle gaps; the cursor chain inside one gap is a ``cumsum``
+    starting at the gap's left edge (exactly the reference's repeated
+    ``cursor += pulse_s``)."""
+    ticks = len(ks)
+    n_rows = len(chunks)
+    widths_a = np.asarray(widths)
+    chunks_a = np.asarray(chunks, dtype=np.int64)
+
+    # per-tick gap table from the global busy complement: clipping picks
+    # max/min of existing floats, so gap edges match idle_gaps() exactly
+    g_start = np.concatenate(([-np.inf], e_arr))
+    g_end = np.concatenate((s_arr, [np.inf]))
+    g_lo = np.searchsorted(g_end, lo, side="right")
+    g_hi = np.searchsorted(g_start, deadline, side="left")
+    counts = np.maximum(0, g_hi - g_lo)
+    # a zero-width leading gap (busy starting exactly at lo) is skipped
+    # by idle_gaps' strict `s > t`; it can only be the first gap
+    first_end = np.minimum(deadline, g_end[np.minimum(g_lo, len(g_end) - 1)])
+    first_start = np.maximum(lo, g_start[np.minimum(g_lo, len(g_end) - 1)])
+    g_lo = g_lo + ((counts > 0) & (first_end <= first_start))
+
+    out_tick: list = []
+    out_deadline: list = []
+    out_start: list = []
+    out_stall: list = []
+    out_row: list = []
+    out_words: list = []
+    out_rows: list = []
+    out_hidden: list = []
+    gs_l = g_start.tolist()
+    ge_l = g_end.tolist()
+    lo_l = lo.tolist()
+    dl_l = deadline.tolist()
+    g_lo_l = g_lo.tolist()
+    g_hi_l = g_hi.tolist()
+    widths_l = widths
+    chunks_l = chunks
+
+    for ti in range(ticks):
+        tick_lo = lo_l[ti]
+        hi = dl_l[ti]
+        r = 0
+        for g in range(g_lo_l[ti], g_hi_l[ti]):
+            if r >= n_rows:
+                break
+            c0 = gs_l[g]
+            if c0 < tick_lo:
+                c0 = tick_lo
+            gend = ge_l[g]
+            if gend > hi:
+                gend = hi
+            if gend <= c0:
+                continue
+            w_rem = widths_a[r:]
+            chain = np.cumsum(np.concatenate(([c0], w_rem)))
+            fit = (gend - chain[:-1]) >= w_rem
+            k = int(np.argmin(fit)) if not fit.all() else len(fit)
+            if k:
+                out_tick.append(np.full(k, ks[ti]))
+                out_deadline.append(np.full(k, hi))
+                out_start.append(chain[:k])
+                out_stall.append(np.zeros(k))
+                out_row.append(np.arange(r, r + k))
+                out_words.append(chunks_a[r:r + k])
+                out_rows.append(np.ones(k, dtype=np.int64))
+                out_hidden.append(np.ones(k, dtype=bool))
+                r += k
+        if r < n_rows:
+            # gaps exhausted: this row and every later one preempt, as
+            # one aggregated run (left-fold sums match the reference's
+            # sum(widths[r:]) / sum(chunks[r:]))
+            out_tick.append(np.asarray([ks[ti]]))
+            out_deadline.append(np.asarray([hi]))
+            out_start.append(np.asarray([hi]))
+            out_stall.append(np.asarray([sum(widths_l[r:])]))
+            out_row.append(np.asarray([r]))
+            out_words.append(np.asarray([sum(chunks_l[r:])],
+                                        dtype=np.int64))
+            out_rows.append(np.asarray([n_rows - r], dtype=np.int64))
+            out_hidden.append(np.asarray([False]))
+
+    if not out_tick:
+        return _empty_pulses(bank_idx)
+    return BankPulses(
+        bank=bank_idx,
+        tick=np.concatenate(out_tick).astype(np.int64),
+        deadline=np.concatenate(out_deadline),
+        start=np.concatenate(out_start),
+        hidden=np.concatenate(out_hidden),
+        stall=np.concatenate(out_stall),
+        row=np.concatenate(out_row).astype(np.int64),
+        words=np.concatenate(out_words),
+        rows=np.concatenate(out_rows))
+
+
+def place_all_pulses_vector(core, makespan: float) -> dict:
+    """Pulse placements for every bank the policy refreshes — the vector
+    twin of the dict comprehension in ``replay_timeline``; returns
+    ``{bank index: BankPulses}``."""
+    return {
+        b.index: place_pulses_vector(core.sched, b, makespan, core.freq_hz)
+        for b in core.alloc.banks if core.sched.would_refresh(b)}

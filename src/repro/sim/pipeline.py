@@ -191,7 +191,8 @@ def stage_memory(arm: Arm, ctx: SimContext) -> None:
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         op_durations=ctx.op_durations, retention_s=retention,
         granularity=cfg.refresh_granularity,
-        reads_restore=cfg.reads_restore, recorder=ctx.recorder)
+        reads_restore=cfg.reads_restore, recorder=ctx.recorder,
+        backend=cfg.replay_backend)
 
 
 def _buffered_partition(events) -> tuple[float, list]:

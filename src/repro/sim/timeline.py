@@ -117,7 +117,8 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
                     sample_scale: float = 1.0, refresh_guard: float = 1.0,
                     retention_s=None, granularity: str = "bank",
                     reads_restore: bool = False,
-                    recorder=None) -> mtr.ControllerReport:
+                    recorder=None,
+                    backend: str = "python") -> mtr.ControllerReport:
     """Replay ``events`` with the closed-loop timeline model.
 
     Same contract as :func:`repro.memory.trace.replay` (energies in J,
@@ -139,34 +140,56 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
     refresh-energy counters — plus the reconciliation metadata
     ``repro.obs.reconcile`` needs.  Strictly observation: every number
     in the returned report is bit-identical with or without a recorder.
+
+    ``backend="vector"`` runs the whole engine — replay core, closed-loop
+    walk, pulse placement — on the numpy interval engine
+    (``repro.memory.vector``); the report is bit-identical.  A recorder
+    downgrades the request to the reference path with a logged warning
+    (``mtr.resolve_backend``), since span recording observes the scalar
+    walks' per-event side effects.
     """
+    backend = mtr.resolve_backend(backend, recorder)
     core = mtr.replay_core(
         events, cfg, temp_c=temp_c, duration_s=duration_s,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
         granularity=granularity, reads_restore=reads_restore,
-        recorder=recorder)
+        recorder=recorder, backend=backend)
 
-    makespan = closed_loop_walk(core, op_schedule, recorder=recorder)
-    makespan = max(makespan, duration_s)
-    conflict_stall_s = makespan - duration_s
+    if backend == "vector":
+        from repro.memory import vector as vec
+        makespan = vec.closed_loop_walk_vector(core, op_schedule)
+        makespan = max(makespan, duration_s)
+        conflict_stall_s = makespan - duration_s
+        bank_pulses = vec.place_all_pulses_vector(core, makespan)
+        decisions = core.sched.account(
+            core.alloc.banks, duration_s, core.freq_hz,
+            cfg.refresh_read_pj, cfg.refresh_restore_pj,
+            pulse_stats={i: (bp.count, bp.stall_s, bp.hidden_count)
+                         for i, bp in bank_pulses.items()})
+        n_pulses = sum(bp.count for bp in bank_pulses.values())
+        hidden = sum(bp.hidden_count for bp in bank_pulses.values())
+    else:
+        makespan = closed_loop_walk(core, op_schedule, recorder=recorder)
+        makespan = max(makespan, duration_s)
+        conflict_stall_s = makespan - duration_s
 
-    # place one pulse per retention tick into each refreshed bank's idle
-    # windows on the *pushed-back* timeline
-    placements = {
-        b.index: core.sched.place_pulses(b, makespan, core.freq_hz)
-        for b in core.alloc.banks if core.sched.would_refresh(b)}
-    decisions = core.sched.account(
-        core.alloc.banks, duration_s, core.freq_hz,
-        cfg.refresh_read_pj, cfg.refresh_restore_pj,
-        placements=placements)
+        # place one pulse per retention tick into each refreshed bank's
+        # idle windows on the *pushed-back* timeline
+        placements = {
+            b.index: core.sched.place_pulses(b, makespan, core.freq_hz)
+            for b in core.alloc.banks if core.sched.would_refresh(b)}
+        decisions = core.sched.account(
+            core.alloc.banks, duration_s, core.freq_hz,
+            cfg.refresh_read_pj, cfg.refresh_restore_pj,
+            placements=placements)
 
-    pulses = [p for ps in placements.values() for p in ps]
-    # p.rows is the pulse multiplicity (an aggregated preempting run of
-    # row pulses counts each of its rows)
-    n_pulses = sum(p.rows for p in pulses)
-    hidden = sum(p.rows for p in pulses if p.hidden)
+        pulses = [p for ps in placements.values() for p in ps]
+        # p.rows is the pulse multiplicity (an aggregated preempting run
+        # of row pulses counts each of its rows)
+        n_pulses = sum(p.rows for p in pulses)
+        hidden = sum(p.rows for p in pulses if p.hidden)
     summary = {
         "makespan_s": makespan,
         "schedule_s": duration_s,
@@ -221,7 +244,7 @@ def stage_timeline(arm: Arm, ctx: SimContext) -> None:
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         retention_s=retention, granularity=cfg.refresh_granularity,
         reads_restore=cfg.reads_restore,
-        recorder=ctx.recorder)
+        recorder=ctx.recorder, backend=cfg.replay_backend)
 
 
 TIMELINE_PIPELINE = DEFAULT_PIPELINE.with_stage("memory", stage_timeline)

@@ -1,0 +1,244 @@
+"""Differential fuzz: the vectorized replay backend vs the reference
+scalar walk (``repro.memory.vector`` behind ``backend="vector"``).
+
+The vector engine's contract is *bit-identical* reports — not approx —
+so every check here is exact ``==``: controller reports under both
+stall models, pulse placements, and the ``repro.obs.reconcile``
+exact-equality harness run against the vector report.
+
+Random traces cover alloc/write/read/free/evict mixes, buffered
+whole-iteration tensors, spill-inducing sizes (single tensors larger
+than the whole array), and residency lifetimes straddling retention
+ticks.  When ``hypothesis`` is installed the same differential property
+runs under its shrinker as well; the concrete seeded grid below always
+runs, so the suite adds no dependency on it.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro import obs, sim
+import repro.serve  # noqa: F401  (registers the Serve/* arms)
+from repro.core import edram as ed
+from repro.core.schedule import TraceEvent
+from repro.memory import REPLAY_BACKENDS, replay, replay_core, \
+    resolve_backend
+from repro.memory import vector as vec
+from repro.obs.recorder import SpanRecorder
+from repro.sim.timeline import closed_loop_walk, replay_timeline
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - container has none
+    HAVE_HYPOTHESIS = False
+
+CFG = ed.EDRAMConfig()
+WORD = CFG.word_bits
+BANK_BITS = CFG.bank_kb * 1024 * 8
+
+
+# ------------------------------------------------------ trace generator
+
+def _random_trace(rng, *, n_ops=32, n_tensors=14, duration_s=1e-3):
+    """A random but well-formed trace + op schedule.
+
+    Each tensor gets a birth (``alloc`` or ``write``), sorted mid-life
+    reads/rewrites, and one of ``free`` / ``evict`` / survives-to-end.
+    Sizes are log-spread from one word up past a whole bank, with an
+    occasional array-sized giant to force spills; ~15% of ops have zero
+    duration (fused elementwise, per the schedule contract).
+    """
+    dt = duration_s / n_ops
+    schedule = []
+    for k in range(n_ops):
+        dur = 0.0 if rng.random() < 0.15 else dt
+        schedule.append((f"op{k}", k * dt, k * dt + dur))
+
+    events = []
+    for j in range(n_tensors):
+        birth = rng.randrange(n_ops)
+        death = rng.randrange(birth, n_ops)
+        if rng.random() < 0.10:
+            bits = float(rng.randrange(int(8 * BANK_BITS),
+                                       int(16 * BANK_BITS)))
+        else:
+            bits = float(rng.randrange(WORD, int(2 * BANK_BITS)))
+        buffered = rng.random() < 0.25
+        name = f"t{j}"
+        kind0 = "alloc" if rng.random() < 0.2 else "write"
+        touches = []
+        for _ in range(rng.randrange(0, 4)):
+            k = rng.randrange(birth, death + 1)
+            kind = "read" if rng.random() < 0.7 else "write"
+            touches.append(TraceEvent(k * dt, f"op{k}", name, kind, bits,
+                                      buffered=buffered))
+        touches.sort(key=lambda e: e.time)
+        tensor_events = [TraceEvent(birth * dt, f"op{birth}", name, kind0,
+                                    bits, buffered=buffered)] + touches
+        end = rng.random()
+        if end < 0.70:
+            tensor_events.append(TraceEvent(death * dt, f"op{death}",
+                                            name, "free", bits,
+                                            buffered=buffered))
+        elif end < 0.85:
+            tensor_events.append(TraceEvent(death * dt, f"op{death}",
+                                            name, "evict", bits,
+                                            buffered=buffered))
+        events.extend(tensor_events)
+    # stable sort: per-tensor event order survives equal timestamps
+    events.sort(key=lambda e: e.time)
+    return events, schedule, duration_s
+
+
+def _random_params(rng, duration_s):
+    return dict(
+        temp_c=rng.choice([60.0, 100.0]),
+        duration_s=duration_s,
+        refresh_policy=rng.choice(["always", "selective", "none"]),
+        alloc_policy=rng.choice(["pingpong", "first_fit", "lifetime"]),
+        freq_hz=500e6,
+        sample_scale=rng.choice([1.0, 4.0]),
+        # retention straddles the trace: a handful of ticks, so some
+        # tensor lifetimes cross tick boundaries and some don't
+        retention_s=rng.choice([duration_s / 3, duration_s / 7, None]),
+        granularity=rng.choice(["bank", "row"]),
+        reads_restore=rng.random() < 0.5,
+    )
+
+
+# ------------------------------------------------- the differential
+
+def _check_case(events, schedule, kw):
+    """Exact equality of both stall models and the pulse placements."""
+    durations = {n: e - s for n, s, e in schedule}
+
+    add_p = replay(events, CFG, op_durations=durations, **kw)
+    add_v = replay(events, CFG, op_durations=durations,
+                   backend="vector", **kw)
+    assert add_p == add_v
+
+    tml_p = replay_timeline(events, CFG, op_schedule=schedule, **kw)
+    tml_v = replay_timeline(events, CFG, op_schedule=schedule,
+                            backend="vector", **kw)
+    assert tml_p == tml_v
+
+    # pulse placements, PulsePlacement for PulsePlacement
+    core_p = replay_core(events, CFG, **kw)
+    makespan = max(closed_loop_walk(core_p, schedule), kw["duration_s"])
+    ref = {b.index: core_p.sched.place_pulses(b, makespan, core_p.freq_hz)
+           for b in core_p.alloc.banks if core_p.sched.would_refresh(b)}
+    core_v = replay_core(events, CFG, backend="vector", **kw)
+    mk_v = max(vec.closed_loop_walk_vector(core_v, schedule),
+               kw["duration_s"])
+    assert mk_v == makespan
+    pulses = vec.place_all_pulses_vector(core_v, mk_v)
+    assert set(pulses) == set(ref)
+    for i in sorted(ref):
+        assert pulses[i].to_placements() == ref[i]
+    return tml_p
+
+
+def _run_seed(seed):
+    rng = random.Random(seed)
+    events, schedule, duration_s = _random_trace(rng)
+    kw = _random_params(rng, duration_s)
+    _check_case(events, schedule, kw)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_fuzz_backends_bit_identical(seed):
+    _run_seed(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**9))
+    def test_fuzz_backends_bit_identical_hypothesis(seed):
+        _run_seed(seed)
+
+
+# ------------------------------------- reconciliation against the trace
+
+@pytest.mark.parametrize("gran", ("bank", "row"))
+def test_vector_report_reconciles_with_recorded_trace(gran):
+    """The acid test: record the reference walk's full span history,
+    then reconcile it against the *vector* report — exact equality on
+    every RECONCILED_FIELDS scalar only holds if the two backends agree
+    bit-for-bit on stalls, hiding splits, and row multiplicities."""
+    rng = random.Random(97 if gran == "bank" else 101)
+    events, schedule, duration_s = _random_trace(rng)
+    kw = dict(temp_c=100.0, duration_s=duration_s,
+              refresh_policy="always", alloc_policy="pingpong",
+              freq_hz=500e6, retention_s=duration_s / 5,
+              granularity=gran)
+    rec = SpanRecorder()
+    tml_p = replay_timeline(events, CFG, op_schedule=schedule,
+                            recorder=rec, **kw)
+    tml_v = replay_timeline(events, CFG, op_schedule=schedule,
+                            backend="vector", **kw)
+    assert tml_p == tml_v
+    assert tml_p.refresh_count > 0         # the case exercises refresh
+    res = obs.reconcile(rec, tml_v)
+    assert res.ok, str(res)
+
+
+# ------------------------------------------------ backend seam contract
+
+def test_resolve_backend_validates_and_downgrades():
+    assert REPLAY_BACKENDS == ("python", "vector")
+    assert resolve_backend("python") == "python"
+    assert resolve_backend("vector") == "vector"
+    with pytest.raises(ValueError, match="unknown replay backend"):
+        resolve_backend("numba")
+    # a recorder forces the reference walk (span recording observes the
+    # scalar walk's per-event side effects)
+    assert resolve_backend("vector", recorder=object()) == "python"
+
+
+def test_recorder_downgrade_is_report_invariant(capsys):
+    rng = random.Random(7)
+    events, schedule, duration_s = _random_trace(rng)
+    kw = dict(temp_c=100.0, duration_s=duration_s,
+              refresh_policy="always", alloc_policy="pingpong",
+              freq_hz=500e6, retention_s=duration_s / 4,
+              granularity="row")
+    rec = SpanRecorder()
+    downgraded = replay_timeline(events, CFG, op_schedule=schedule,
+                                 backend="vector", recorder=rec, **kw)
+    assert "replay_backend_downgrade" in capsys.readouterr().err
+    reference = replay_timeline(events, CFG, op_schedule=schedule, **kw)
+    assert downgraded == reference
+    assert rec.spans                       # the trace was still recorded
+
+
+# ----------------------------------------------- golden-pin arm grid
+
+ARMS = ("DuDNN+CAMEL", "FR+SRAM", "CA+CAMEL", "BO+CAMEL", "Serve/skip")
+
+
+def _comparable(report):
+    """ArmReport as a dict minus the fields that legitimately differ
+    across backends: ``config`` records ``replay_backend`` itself."""
+    d = dataclasses.asdict(report)
+    d.pop("config", None)
+    d.pop("profile", None)
+    d.pop("trace", None)
+    return d
+
+
+@pytest.mark.parametrize("name", ARMS)
+@pytest.mark.parametrize("gran", ("bank", "row"))
+@pytest.mark.parametrize("temp", (60.0, 100.0))
+def test_vector_backend_matches_arm_goldens(name, gran, temp):
+    """The Fig-24 training arms and the serving arm, both granularities
+    and temperatures: the vector backend reproduces the golden-pinned
+    reports (test_sim / test_serve pin the python-path numbers; this
+    pins vector == python, so the goldens transfer bit-for-bit)."""
+    arm = sim.get_arm(name).with_system(temp_c=temp,
+                                        refresh_granularity=gran)
+    ref = sim.run(arm.with_system(replay_backend="python"))
+    vec_rep = sim.run(arm.with_system(replay_backend="vector"))
+    assert _comparable(ref) == _comparable(vec_rep)

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""CI gate for timeline-replay throughput.
+
+Usage: check_replay_bench.py FRESH_JSON [--record BENCH_replay.json]
+                             [--floor 0.7]
+
+FRESH_JSON is a ``python -m benchmarks.replay_throughput --json`` dump
+from the current checkout.  For every mode (granularity + backend +
+traced combination, e.g. ``row+vector``) present in *both* the fresh
+run and the committed trajectory file, the fresh ``ops_per_s`` must be
+at least ``--floor`` (default 0.7) times the **best** committed record
+for that mode — so a PR can be a little slower than the best day ever
+measured (CI machines are noisy) but a real regression fails the gate.
+
+Modes with no committed record yet (a new backend, a new trace row)
+pass with a note; commit a ``--update`` record to start gating them.
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_RECORD = REPO / "BENCH_replay.json"
+
+
+def mode_tag(m: dict) -> str:
+    # mirrors benchmarks.replay_throughput.mode_tag (kept standalone so
+    # the tool runs without PYTHONPATH=src)
+    return (m["granularity"]
+            + ("+vector" if m.get("backend") == "vector" else "")
+            + ("+trace" if m.get("traced") else ""))
+
+
+def best_committed(record_path: pathlib.Path) -> dict:
+    """mode tag -> best committed ops_per_s across all records."""
+    data = json.loads(record_path.read_text())
+    best: dict = {}
+    for rec in data.get("records", []):
+        for m in rec.get("measurements", []):
+            tag = mode_tag(m)
+            best[tag] = max(best.get(tag, 0.0), m["ops_per_s"])
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", type=pathlib.Path,
+                    help="fresh measurement dump (--json output)")
+    ap.add_argument("--record", type=pathlib.Path, default=DEFAULT_RECORD,
+                    help="committed trajectory file (default: "
+                         "BENCH_replay.json at the repo root)")
+    ap.add_argument("--floor", type=float, default=0.7,
+                    help="minimum fresh/best-committed ratio per mode")
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(args.fresh.read_text())
+    best = best_committed(args.record)
+    if not best:
+        print(f"ERROR: no committed records in {args.record}")
+        return 1
+
+    failures = 0
+    gated = 0
+    for m in fresh:
+        tag = mode_tag(m)
+        got = m["ops_per_s"]
+        if tag not in best:
+            print(f"note: {tag}  {got:.0f} ops/s  (no committed record "
+                  "yet; not gated)")
+            continue
+        gated += 1
+        need = args.floor * best[tag]
+        ok = got >= need
+        failures += not ok
+        print(f"{'ok ' if ok else 'FAIL'}: {tag}  {got:.0f} ops/s  "
+              f"(floor {need:.0f} = {args.floor:g}x best committed "
+              f"{best[tag]:.0f})")
+    if not gated:
+        print("ERROR: no fresh measurement matched a committed mode")
+        return 1
+    if failures:
+        print(f"{failures} mode(s) below the throughput floor")
+        return 1
+    print(f"all {gated} gated mode(s) above the floor")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
