@@ -14,9 +14,12 @@ Rows: ``replay_throughput/<granularity>[+vector],us_per_op,...`` — one
 pair per granularity (the reference ``python`` walk and the numpy
 ``vector`` interval engine, which must produce bit-identical reports;
 ``tests/test_replay_backends.py`` enforces that, this suite prices it).
-A final row replays with a flight recorder attached
-(``repro.obs.SpanRecorder``) to price the observation overhead — always
-on the reference walk, since a recorder downgrades ``vector``.
+A final pair of rows replays with a flight recorder attached
+(``repro.obs.SpanRecorder``) to price the observation overhead, and on
+a hybrid SRAM+eDRAM ``MemorySystem`` (``+tiered`` — an iso-area 0.25
+split under ``lifetime_tiered`` routing, ``repro.memory.tiers``) to
+price the tier-routing overhead — both always on the reference walk,
+since a recorder or a tiered config downgrades ``vector``.
 
 The committed record lives in ``BENCH_replay.json`` (repo root);
 re-measure and append with::
@@ -38,6 +41,7 @@ import time
 
 from repro.core import hwmodel as hw
 from repro.core.schedule import TraceEvent
+from repro.memory.tiers import iso_area_tiers
 from repro.obs.recorder import SpanRecorder
 from repro.sim.timeline import replay_timeline
 
@@ -49,6 +53,7 @@ N_OPS = 2000
 WORDS_PER_TENSOR = 4096          # ~4 rows at the default 1024-word rows
 TICKS = 24                       # retention ticks inside the trace
 FREQ_HZ = 500e6
+TIER_SPLIT = 0.25                # SRAM area share of the tiered row
 
 
 def synthetic_trace(n_ops: int = N_OPS,
@@ -79,20 +84,24 @@ def synthetic_trace(n_ops: int = N_OPS,
 
 
 def _measure(granularity: str, recorder=None, n_ops: int = N_OPS,
-             backend: str = "python") -> dict:
+             backend: str = "python", tiered: bool = False) -> dict:
     """One timed replay; returns the measurement record (no I/O)."""
     events, op_schedule, duration_s, cfg = synthetic_trace(n_ops)
+    tiers = iso_area_tiers(cfg, TIER_SPLIT) if tiered else None
+    policy = "lifetime_tiered" if tiered else "pingpong"
     t0 = time.perf_counter()
     rep = replay_timeline(
         events, cfg, op_schedule=op_schedule, temp_c=100.0,
         duration_s=duration_s, refresh_policy="always",
-        freq_hz=FREQ_HZ, retention_s=duration_s / TICKS,
-        granularity=granularity, recorder=recorder, backend=backend)
+        alloc_policy=policy, freq_hz=FREQ_HZ,
+        retention_s=duration_s / TICKS, granularity=granularity,
+        recorder=recorder, backend=backend, tiers=tiers)
     wall = time.perf_counter() - t0
     return {
         "granularity": granularity,
         "backend": backend,
         "traced": recorder is not None,
+        "tiered": tiered,
         "n_ops": n_ops,
         "events": len(events),
         "wall_s": wall,
@@ -115,6 +124,9 @@ def measurements(n_ops: int = N_OPS, backends=("python", "vector")) -> list:
         # tracing forces the reference walk (vector downgrades), so the
         # observation-overhead row only exists for the python engine
         out.append(_measure("bank", recorder=SpanRecorder(), n_ops=n_ops))
+        # likewise the hybrid SRAM+eDRAM MemorySystem needs the
+        # reference walk: this row prices the tier-routing overhead
+        out.append(_measure("bank", n_ops=n_ops, tiered=True))
     return out
 
 
@@ -122,7 +134,8 @@ def mode_tag(m: dict) -> str:
     """The stable row/mode key for one measurement record."""
     return (m["granularity"]
             + ("+vector" if m.get("backend") == "vector" else "")
-            + ("+trace" if m["traced"] else ""))
+            + ("+trace" if m["traced"] else "")
+            + ("+tiered" if m.get("tiered") else ""))
 
 
 def run() -> list:

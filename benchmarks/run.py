@@ -45,7 +45,7 @@ import traceback
 from benchmarks import (bank_occupancy, bfp_fidelity, fig21_ablations,
                         fig22_retention, fig23_lifetime, fig24_tta_eta,
                         replay_throughput, serve_sweep, table2_accuracy,
-                        table3_arraysize)
+                        table3_arraysize, tier_sweep)
 
 SUITES = {
     "table2": table2_accuracy.run,      # accuracy arms (slow-ish: trains)
@@ -58,6 +58,7 @@ SUITES = {
     "bank_occupancy": bank_occupancy.run,   # repro.memory controller
     "replay": replay_throughput.run,    # timeline-engine ops/sec
     "serve_sweep": serve_sweep.run,     # KV-policy serving tradeoff
+    "tier_sweep": tier_sweep.run,       # iso-area SRAM:eDRAM hybrid
 }
 SLOW = {"table2", "fig21", "bfp"}       # these train models on CPU
 

@@ -1,0 +1,175 @@
+"""Iso-area SRAM:eDRAM tier sweep — the mixed-cell tradeoff as CSV rows.
+
+Sweeps the ``Hybrid+CAMEL`` arm family (``repro.sim.hybrid``) over the
+SRAM area share ``s`` at the hot 100 °C operating point, where the
+all-eDRAM ``DuDNN+CAMEL`` endpoint pays refresh (3.4 µs retention) and
+the all-SRAM ``FR+SRAM`` endpoint pays capacity (half the density, DRAM
+spills).  Each grid point replaces the bank array with
+``repro.memory.tiers.iso_area_tiers(cfg, s)`` — a refresh-free SRAM
+tier and a dense eDRAM tier at equal silicon area — under the
+``lifetime_tiered`` routing policy (MCAIMem, arXiv 2312.03559):
+over-retention tensors to SRAM, transients to eDRAM.
+
+The three claims ``tools/check_tier_sweep.py`` gates CI on:
+
+- **leakage is monotone in s** — SRAM cells leak more per kB, so static
+  power rises with the SRAM share (1.536 + 0.96·s mW on the stock
+  geometry), independent of workload;
+- **refresh → 0 as s → 1** — once every over-retention tensor fits the
+  SRAM tier the eDRAM banks hold only sub-retention transients and the
+  lifetime scheduler skips every pulse;
+- **an interior split beats both endpoints on energy** — the hybrid
+  keeps (most of) eDRAM's density and traffic efficiency while paying
+  zero refresh.
+
+The endpoints delegate to the registered homogeneous arms themselves
+(``hybrid_arm(0.0) is get_arm("DuDNN+CAMEL")``), so endpoint rows match
+the existing Fig-24 records exactly by construction.
+
+Rows: ``tier_sweep/s<split>,us_per_iter,energy_j=...;refresh_j=...;
+leakage_mw=...;refresh_free=...;sram_kb=...;edram_kb=...``
+
+The committed record lives in ``BENCH_tiers.json`` (repo root);
+re-measure and append with::
+
+    PYTHONPATH=src python -m benchmarks.tier_sweep --update
+
+``--json PATH`` writes the measurement grid for the CI gate::
+
+    PYTHONPATH=src python -m benchmarks.tier_sweep --json tiers.json
+    python tools/check_tier_sweep.py tiers.json
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro import sim
+from repro.core import hwmodel as hw
+from repro.memory.tiers import iso_area_tiers
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_tiers.json"
+
+# SRAM area-share axis: homogeneous endpoints + the interior continuum
+# (0.25 is the registered Hybrid+CAMEL split)
+SPLITS = (0.0, 0.125, 0.25, 0.5, 0.75, 1.0)
+# the hot operating point — retention 3.4 µs, where refresh actually
+# costs the all-eDRAM endpoint something worth trading area against
+TEMP_C = 100.0
+
+
+def _tier_kb(s: float) -> tuple:
+    """(sram_kb, edram_kb) capacity of the iso-area split ``s`` on the
+    stock geometry — from the tier specs themselves, so the row always
+    reflects what :func:`repro.memory.tiers.iso_area_tiers` built."""
+    tiers = iso_area_tiers(hw.SystemConfig().edram, s)
+    by_cell = {t.cell: t.capacity_kb for t in tiers}
+    return by_cell.get("sram", 0.0), by_cell.get("edram", 0.0)
+
+
+def _leakage_mw(s: float) -> float:
+    """Static tier leakage (mW) at split ``s`` — workload-independent,
+    strictly increasing in the SRAM share (the monotone CI check)."""
+    return sum(t.leakage_mw for t in iso_area_tiers(hw.SystemConfig()
+                                                    .edram, s))
+
+
+def measurements(splits=SPLITS, temp_c: float = TEMP_C,
+                 timing=None, parallel=None) -> list:
+    """One record per split: the hybrid arm's headline numbers plus the
+    tier geometry that produced them."""
+    arms = [sim.hybrid_arm(s) for s in splits]
+    flat = sim.sweep(arms, timing=timing, temps=[temp_c],
+                     parallel=parallel)
+    out = []
+    for s, rep in zip(splits, flat):
+        sram_kb, edram_kb = _tier_kb(s)
+        out.append({
+            "split": float(s),
+            "arm": rep.arm,
+            "energy_j": rep.energy_j,
+            "refresh_j": rep.memory["refresh_j"],
+            "refresh_free": rep.refresh_free,
+            "leakage_mw": _leakage_mw(s),
+            "latency_s": rep.latency_s,
+            "offchip_bits": rep.offchip_bits,
+            "sram_kb": sram_kb,
+            "edram_kb": edram_kb,
+        })
+    return out
+
+
+def run(timing=None, parallel=None) -> list:
+    rows: list = []
+    ms = measurements(timing=timing, parallel=parallel)
+    for m in ms:
+        rows.append({
+            "row": (f"tier_sweep/s{m['split']:g},"
+                    f"{m['latency_s'] * 1e6:.2f},"
+                    f"energy_j={m['energy_j']:.4e};"
+                    f"refresh_j={m['refresh_j']:.4e};"
+                    f"leakage_mw={m['leakage_mw']:.3f};"
+                    f"refresh_free={m['refresh_free']};"
+                    f"sram_kb={m['sram_kb']:g};"
+                    f"edram_kb={m['edram_kb']:g}"),
+            "arm": m["arm"],
+            "split": m["split"],
+            "energy_j": m["energy_j"],
+            "temp_c": TEMP_C,
+        })
+    interior = min((m for m in ms if 0.0 < m["split"] < 1.0),
+                   key=lambda m: m["energy_j"])
+    lo, hi = ms[0], ms[-1]
+    rows.append(f"tier_sweep/claim,0,paper=mixed SRAM+eDRAM beats both "
+                f"homogeneous endpoints at iso-area; "
+                f"best_interior=s{interior['split']:g}"
+                f"@{interior['energy_j']:.4e}J;"
+                f"edram_endpoint={lo['energy_j']:.4e}J;"
+                f"sram_endpoint={hi['energy_j']:.4e}J")
+    return rows
+
+
+def update_bench(path=BENCH_PATH) -> dict:
+    """Append today's measurement grid to the committed trajectory file."""
+    path = pathlib.Path(path)
+    data = (json.loads(path.read_text()) if path.exists()
+            else {"benchmark": "tier_sweep",
+                  "workload": {"arm": "Hybrid+CAMEL family (DuDNN "
+                                      "workload)",
+                               "temp_c": TEMP_C,
+                               "splits": list(SPLITS)},
+                  "records": []})
+    record = {"date": time.strftime("%Y-%m-%d"),
+              "measurements": measurements()}
+    data["records"].append(record)
+    path.write_text(json.dumps(data, indent=1) + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help=f"append a record to {BENCH_PATH.name}")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measurement grid as JSON (for "
+                         "tools/check_tier_sweep.py)")
+    ap.add_argument("--splits", default=None,
+                    help="comma-separated SRAM shares (default "
+                         + ",".join(f"{s:g}" for s in SPLITS) + ")")
+    args = ap.parse_args()
+    splits = (tuple(float(x) for x in args.splits.split(","))
+              if args.splits else SPLITS)
+    if args.update:
+        rec = update_bench()
+        print(f"appended {rec['date']} record to {BENCH_PATH}")
+    if args.json:
+        grid = {"benchmark": "tier_sweep", "temp_c": TEMP_C,
+                "measurements": measurements(splits)}
+        pathlib.Path(args.json).write_text(json.dumps(grid, indent=1)
+                                           + "\n")
+        print(f"wrote {args.json}")
+    for r in run():
+        print(r["row"] if isinstance(r, dict) else r)

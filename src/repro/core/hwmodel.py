@@ -94,6 +94,13 @@ class SystemConfig:
     # bank count the controller splits ``onchip_bits`` into when
     # ``use_edram=False`` (the paper's 4×48KB activation SRAMs)
     sram_banks: int = 4
+    # hybrid SRAM+eDRAM memory (repro.memory.tiers): a tuple of TierSpec
+    # replaces the homogeneous bank array with a multi-tier MemorySystem
+    # — ``alloc_policy`` then names a tier-routing policy (e.g.
+    # "lifetime_tiered") and ``onchip_bits`` should equal the tiers'
+    # total capacity.  ``None`` (default) keeps the single-tier model;
+    # build iso-area splits with ``repro.memory.tiers.iso_area_tiers``.
+    tiers: object = None
 
 
 _SRAM_ONLY = SystemConfig(

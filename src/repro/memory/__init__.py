@@ -14,22 +14,37 @@ closed-loop event-interleaved engine in ``repro.sim.timeline``, which
 builds on :func:`replay_core`, the per-bank busy intervals
 (``BankState.occupy_port`` / ``idle_window``) and the deadline-driven
 pulse placement (``RefreshScheduler.place_pulses``).
+
+Placement is a pluggable strategy (``tiers``): the classic policies are
+:class:`PlacementPolicy` singletons, and a hybrid SRAM+eDRAM
+:class:`MemorySystem` (one allocator per :class:`TierSpec`, tier routing
+via :class:`TierPolicy` — MCAIMem's ``lifetime_tiered``) drops in behind
+the same replay interface.  Build iso-area SRAM:eDRAM splits with
+:func:`iso_area_tiers`.
 """
 from repro.memory.banks import BankGeometry, BankState, port_service_s
-from repro.memory.allocator import ALLOC_POLICIES, Allocator, Placement
+from repro.memory.tiers import (ALLOC_POLICIES, TIER_POLICIES,
+                                MemorySystem, PlacementPolicy, TierPolicy,
+                                TierSpec, iso_area_tiers,
+                                resolve_placement_policy,
+                                resolve_tier_policy)
+from repro.memory.allocator import Allocator, Placement
 from repro.memory.refresh import (REFRESH_GRANULARITIES, REFRESH_POLICIES,
                                   PulsePlacement, RefreshDecision,
                                   RefreshScheduler)
 from repro.memory.trace import (REPLAY_BACKENDS, BankReport,
                                 ControllerReport, ReplayCore, TraceEvent,
-                                build_report, merge_traces, replay,
-                                replay_core, resolve_backend)
+                                account_refresh, build_report,
+                                merge_traces, replay, replay_core,
+                                resolve_backend)
 
 __all__ = [
     "ALLOC_POLICIES", "Allocator", "BankGeometry", "BankReport", "BankState",
-    "ControllerReport", "Placement", "PulsePlacement",
-    "REFRESH_GRANULARITIES", "REFRESH_POLICIES", "REPLAY_BACKENDS",
-    "RefreshDecision", "RefreshScheduler", "ReplayCore", "TraceEvent",
-    "build_report", "merge_traces", "port_service_s", "replay",
-    "replay_core", "resolve_backend",
+    "ControllerReport", "MemorySystem", "Placement", "PlacementPolicy",
+    "PulsePlacement", "REFRESH_GRANULARITIES", "REFRESH_POLICIES",
+    "REPLAY_BACKENDS", "RefreshDecision", "RefreshScheduler", "ReplayCore",
+    "TIER_POLICIES", "TierPolicy", "TierSpec", "TraceEvent",
+    "account_refresh", "build_report", "iso_area_tiers", "merge_traces",
+    "port_service_s", "replay", "replay_core", "resolve_backend",
+    "resolve_placement_policy", "resolve_tier_policy",
 ]

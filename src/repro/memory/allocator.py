@@ -1,19 +1,11 @@
 """Tensor-to-bank placement engine (CAMEL §V-B, Fig 17).
 
-Three policies:
-
-``pingpong``
-    FIFO ping-pong placement (Fig 17): each new tensor starts at the bank
-    after the previous allocation's first bank, so producer/consumer
-    tensors of adjacent ops land in different banks and the per-bank ports
-    don't serialize the dataflow.
-``first_fit``
-    Lowest-index bank with space — the densest packing, worst conflicts.
-``lifetime``
-    Lifetime-aware coloring: tensors whose expected lifetime is under the
-    retention floor are steered away from banks holding over-retention
-    tensors (and vice versa), so short-lived data shares banks that the
-    ``selective`` refresh policy can leave entirely unrefreshed.
+Placement strategy is pluggable: the classic policies (``pingpong`` /
+``first_fit`` / ``lifetime``, see :mod:`repro.memory.tiers` for their
+definitions) are resolved through
+:func:`repro.memory.tiers.resolve_placement_policy`, and a
+:class:`~repro.memory.tiers.MemorySystem` composes one allocator per
+memory tier behind this same interface.
 
 A tensor may stripe across several banks; when no combination of free
 words can hold it, the whole tensor spills off-chip (partial spills would
@@ -25,8 +17,7 @@ import dataclasses
 from typing import Optional, Sequence
 
 from repro.memory.banks import BankGeometry, BankState
-
-ALLOC_POLICIES = ("pingpong", "first_fit", "lifetime")
+from repro.memory.tiers import ALLOC_POLICIES, resolve_placement_policy
 
 OFFCHIP = "offchip"
 
@@ -49,11 +40,9 @@ class Allocator:
 
     def __init__(self, geometry: BankGeometry, policy: str = "pingpong",
                  retention_s: Optional[float] = None):
-        if policy not in ALLOC_POLICIES:
-            raise ValueError(f"unknown alloc policy {policy!r}; "
-                             f"choose from {ALLOC_POLICIES}")
+        self._policy = resolve_placement_policy(policy)
         self.geometry = geometry
-        self.policy = policy
+        self.policy = self._policy.name
         self.retention_s = retention_s
         self.banks = [BankState(i, geometry) for i in range(geometry.n_banks)]
         self.placements: dict[str, Placement] = {}
@@ -64,32 +53,12 @@ class Allocator:
 
     # -- policy: bank visit order ----------------------------------------
     def _tiers(self, expected_lifetime_s: Optional[float]) -> list[list]:
-        """Bank indices in placement-preference tiers.  Striping spreads a
-        tensor across one tier before touching the next, so the lifetime
-        policy keeps its coloring while still winning port bandwidth."""
-        n = self.geometry.n_banks
-        if self.policy == "first_fit":
-            return [list(range(n))]
-        if self.policy == "pingpong":
-            return [[(self._next_bank + i) % n for i in range(n)]]
-        # lifetime-aware coloring: prefer banks whose residents are on the
-        # same side of the retention floor as this tensor.
-        short = (self.retention_s is None or expected_lifetime_s is None
-                 or expected_lifetime_s < self.retention_s)
-        match, other, empty = [], [], []
-        for b in self.banks:
-            if not b.resident:
-                empty.append(b.index)
-                continue
-            # classify by what is resident *now*: any tensor expected to
-            # outlive retention poisons the bank for short-lived data
-            bank_short = all(
-                self.placements[t].expected_lifetime_s is None
-                or self.retention_s is None
-                or self.placements[t].expected_lifetime_s < self.retention_s
-                for t in b.resident)
-            (match if bank_short == short else other).append(b.index)
-        return [match, empty, other]
+        """Bank positions in placement-preference groups (delegates to the
+        resolved :class:`~repro.memory.tiers.PlacementPolicy`).  Striping
+        spreads a tensor across one group before touching the next, so the
+        lifetime policy keeps its coloring while still winning port
+        bandwidth."""
+        return self._policy.bank_order(self, expected_lifetime_s)
 
     # -- allocation ------------------------------------------------------
     def place(self, tensor: str, bits: float, now: float,
@@ -140,19 +109,17 @@ class Allocator:
                           expected_lifetime_s=expected_lifetime_s)
             self.placements[tensor] = p
             return p
-        # the lifetime policy packs over-retention tensors densely so they
-        # poison as few banks as possible (those banks refresh; the rest
-        # stay refresh-free); short-lived tensors stripe for bandwidth
-        long_lived = (self.policy == "lifetime"
-                      and self.retention_s is not None
-                      and expected_lifetime_s is not None
-                      and expected_lifetime_s >= self.retention_s)
+        # dense packing serves the policies that minimize footprint (the
+        # lifetime policy packs over-retention tensors densely so they
+        # poison as few banks as possible — those banks refresh; the rest
+        # stay refresh-free); otherwise tensors stripe for bandwidth
+        dense = self._policy.dense(self, expected_lifetime_s)
         takes: dict[int, int] = {}
         remaining = need
         for tier in tiers:
             if remaining == 0:
                 break
-            if self.policy == "first_fit" or long_lived:
+            if dense:
                 # dense packing: fill banks in order (worst port conflicts)
                 for i in tier:
                     if remaining == 0:
@@ -185,8 +152,7 @@ class Allocator:
                 self.banks[i].allocate(tensor, takes[i], now,
                                        scale=lifetime_scale)
                 spans.append((i, takes[i]))
-        if self.policy == "pingpong" and spans:
-            self._next_bank = (spans[0][0] + 1) % self.geometry.n_banks
+        self._policy.placed(self, spans)
         p = Placement(tensor, bits, spans=tuple(spans),
                       expected_lifetime_s=expected_lifetime_s)
         self.placements[tensor] = p

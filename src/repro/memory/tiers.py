@@ -1,0 +1,494 @@
+"""Hybrid SRAM+eDRAM memory tiering and pluggable placement policies
+(MCAIMem, arXiv 2312.03559; CAMEL §V).
+
+CAMEL's allocator places every tensor into one homogeneous bank array.
+This module generalizes that in two steps:
+
+1.  **Placement as a strategy.**  The bank-preference logic that was
+    hard-coded in ``Allocator._tiers``/``Allocator.place`` is a
+    :class:`PlacementPolicy` object: ``bank_order`` returns bank
+    *positions* in preference groups, ``dense`` picks dense packing vs
+    bandwidth striping, and ``placed`` is the post-placement hook (the
+    ping-pong rotation).  The three classic policies (``pingpong`` /
+    ``first_fit`` / ``lifetime``) are bit-identical to the hard-coded
+    originals — every pre-tier golden pin transfers through the seam
+    unchanged (``tests/test_tiers.py``).
+
+2.  **Tiers as first-class hardware.**  A :class:`TierSpec` describes
+    one on-chip tier (cell type, bank geometry, retention, access/
+    refresh/leakage energies — the SRAM numbers come from the comparison
+    points on :class:`~repro.core.edram.EDRAMConfig`), and a
+    :class:`MemorySystem` composes one
+    :class:`~repro.memory.allocator.Allocator` per tier behind the same
+    interface the trace replay drives.  A :class:`TierPolicy` routes
+    each tensor to a tier *first* (``lifetime_tiered``: sub-retention
+    transients → dense eDRAM, over-retention tensors → refresh-free
+    SRAM, with cross-tier fallback when the preferred tier is full and a
+    whole-tensor off-chip spill only when every tier is), then the
+    tier's own single-tier policy picks banks within it.  A tensor lives
+    wholly in one tier — striping a BFP group across cell types would
+    split its shared exponent from its mantissas.
+
+:func:`iso_area_tiers` builds the area-neutral capacity split the
+``sim.sweep(splits=...)`` axis and the ``Hybrid+CAMEL`` arm family
+sweep: at ``sram_split = s``, the silicon that held the all-eDRAM array
+is re-divided so a fraction ``s`` of it becomes SRAM at
+``1/density_vs_sram`` the capacity — ``s = 0`` is the stock eDRAM
+array, ``s = 1`` is exactly the FR baseline's 4×48 KB SRAM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.memory.banks import BankGeometry
+
+# single-tier (within-tier) placement policies — the classic allocator
+# policies, now pluggable.  Kept here (not in allocator.py) so the
+# allocator imports the seam rather than hard-coding it.
+ALLOC_POLICIES = ("pingpong", "first_fit", "lifetime")
+
+# tier-routing policies a MemorySystem resolves (tensor → tier order)
+TIER_POLICIES = ("lifetime_tiered", "tiered_first_fit")
+
+CELL_KINDS = ("edram", "sram")
+
+
+# ------------------------------------------------------------- tier spec
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One on-chip memory tier: cell type, bank geometry, energies.
+
+    ``retention_s=None`` means the cell default — the temperature-derived
+    eDRAM retention curve for ``cell="edram"``, never-decays
+    (``math.inf`` at replay time) for ``cell="sram"``.  Kept ``None`` in
+    the spec itself so ``dataclasses.asdict``/JSON round-trips stay
+    strict-JSON safe (``inf`` is not representable).
+    """
+    name: str
+    cell: str = "edram"
+    n_banks: int = 12
+    bank_kb: float = 32.0
+    word_bits: int = 58
+    rows_per_bank: int = 1024
+    retention_s: Optional[float] = None
+    read_pj_per_bit: float = 0.013
+    write_pj_per_bit: float = 0.017
+    refresh_read_pj_per_bit: float = 0.008
+    refresh_restore_pj_per_bit: float = 0.012
+    leakage_mw_per_kb: float = 0.004
+
+    def __post_init__(self):
+        if self.cell not in CELL_KINDS:
+            raise ValueError(f"unknown cell kind {self.cell!r}; "
+                             f"choose from {CELL_KINDS}")
+
+    @classmethod
+    def edram(cls, cfg, *, name: str = "edram",
+              n_banks: Optional[int] = None,
+              bank_kb: Optional[float] = None) -> "TierSpec":
+        """An eDRAM tier drawn from an ``EDRAMConfig``'s native fields."""
+        return cls(
+            name=name, cell="edram",
+            n_banks=cfg.n_banks if n_banks is None else n_banks,
+            bank_kb=cfg.bank_kb if bank_kb is None else bank_kb,
+            word_bits=cfg.word_bits, rows_per_bank=cfg.words_per_bank,
+            read_pj_per_bit=cfg.read_pj_per_bit,
+            write_pj_per_bit=cfg.write_pj_per_bit,
+            refresh_read_pj_per_bit=cfg.refresh_read_pj,
+            refresh_restore_pj_per_bit=cfg.refresh_restore_pj,
+            leakage_mw_per_kb=cfg.leakage_mw_per_kb)
+
+    @classmethod
+    def sram(cls, cfg, *, name: str = "sram", n_banks: int = 4,
+             bank_kb: float = 48.0,
+             word_bits: Optional[int] = None) -> "TierSpec":
+        """An SRAM tier drawn from the ``EDRAMConfig`` comparison points
+        (6T, same node).  In a hybrid array it stores the same BFP word
+        as the eDRAM tier (``word_bits`` defaults to the config's), so a
+        tensor can move between tiers without repacking."""
+        return cls(
+            name=name, cell="sram", n_banks=n_banks, bank_kb=bank_kb,
+            word_bits=cfg.word_bits if word_bits is None else word_bits,
+            rows_per_bank=0,
+            read_pj_per_bit=cfg.sram_read_pj_per_bit,
+            write_pj_per_bit=cfg.sram_write_pj_per_bit,
+            refresh_read_pj_per_bit=0.0,
+            refresh_restore_pj_per_bit=0.0,
+            leakage_mw_per_kb=cfg.sram_leakage_mw_per_kb)
+
+    def geometry(self) -> BankGeometry:
+        words = int(self.bank_kb * 1024 * 8 // self.word_bits)
+        return BankGeometry(word_bits=self.word_bits,
+                            words_per_bank=words,
+                            n_banks=self.n_banks,
+                            rows_per_bank=self.rows_per_bank)
+
+    @property
+    def capacity_kb(self) -> float:
+        return self.n_banks * self.bank_kb
+
+    @property
+    def capacity_bits(self) -> float:
+        return self.capacity_kb * 1024 * 8
+
+    @property
+    def leakage_mw(self) -> float:
+        """Static leakage power of the whole tier (mW)."""
+        return self.leakage_mw_per_kb * self.capacity_kb
+
+
+def iso_area_tiers(cfg, sram_split: float, *,
+                   sram_banks: int = 4) -> tuple:
+    """The area-neutral SRAM:eDRAM capacity split at ``sram_split`` ∈
+    [0, 1] (the ``splits=`` sweep axis).
+
+    The all-eDRAM array (``cfg.n_banks × cfg.bank_kb``) occupies a fixed
+    silicon area; giving a fraction ``s`` of that area to 6T SRAM yields
+    ``s × total_kb / density_vs_sram`` of SRAM capacity and leaves
+    ``(1-s) × total_kb`` of eDRAM.  Bank *counts* stay fixed and bank
+    capacity shrinks, so port bandwidth is split-invariant.  Endpoint
+    tiers with zero capacity are omitted: ``s=0`` returns the stock
+    eDRAM tier alone; ``s=1`` returns only the SRAM tier — at the
+    default ``density_vs_sram=2.0`` exactly the FR baseline's 4×48 KB.
+    """
+    s = float(sram_split)
+    if not 0.0 <= s <= 1.0:
+        raise ValueError(f"sram_split must be in [0, 1], got {s!r}")
+    total_kb = cfg.n_banks * cfg.bank_kb
+    sram_total_kb = total_kb / cfg.density_vs_sram
+    out = []
+    if s < 1.0:
+        out.append(TierSpec.edram(cfg, bank_kb=cfg.bank_kb * (1.0 - s)))
+    if s > 0.0:
+        out.append(TierSpec.sram(cfg, n_banks=sram_banks,
+                                 bank_kb=sram_total_kb * s / sram_banks))
+    return tuple(out)
+
+
+# --------------------------------------------- single-tier placement seam
+
+class PlacementPolicy:
+    """Strategy deciding *where in one tier's banks* a tensor goes.
+
+    All three methods receive the owning
+    :class:`~repro.memory.allocator.Allocator` (they read its ``banks``,
+    ``placements``, ``retention_s`` and — for ping-pong — its
+    ``_next_bank`` rotation state, which stays on the allocator so
+    policy objects are stateless singletons).
+
+    ``bank_order`` returns bank **positions** (indices into
+    ``alloc.banks``) grouped into preference tiers: striping spreads a
+    tensor across one group before touching the next.  Positions, not
+    ``BankState.index`` — a :class:`MemorySystem` renumbers bank indices
+    globally across tiers, while each sub-allocator keeps addressing its
+    own list positionally.
+    """
+
+    name = "abstract"
+
+    def bank_order(self, alloc, expected_lifetime_s) -> list:
+        raise NotImplementedError
+
+    def dense(self, alloc, expected_lifetime_s) -> bool:
+        """Dense packing (fill banks in order) vs bandwidth striping."""
+        return False
+
+    def placed(self, alloc, spans) -> None:
+        """Post-placement hook (the ping-pong rotation)."""
+
+
+class PingPongPolicy(PlacementPolicy):
+    """FIFO ping-pong placement (Fig 17): each new tensor starts at the
+    bank after the previous allocation's first bank, so producer/consumer
+    tensors of adjacent ops land in different banks."""
+
+    name = "pingpong"
+
+    def bank_order(self, alloc, expected_lifetime_s) -> list:
+        n = len(alloc.banks)
+        return [[(alloc._next_bank + i) % n for i in range(n)]]
+
+    def placed(self, alloc, spans) -> None:
+        if spans:
+            alloc._next_bank = (spans[0][0] + 1) % len(alloc.banks)
+
+
+class FirstFitPolicy(PlacementPolicy):
+    """Lowest-position bank with space — densest packing, worst
+    conflicts."""
+
+    name = "first_fit"
+
+    def bank_order(self, alloc, expected_lifetime_s) -> list:
+        return [list(range(len(alloc.banks)))]
+
+    def dense(self, alloc, expected_lifetime_s) -> bool:
+        return True
+
+
+class LifetimePolicy(PlacementPolicy):
+    """Lifetime-aware coloring: tensors under the retention floor are
+    steered away from banks holding over-retention tensors (and vice
+    versa), so short-lived data shares banks the ``selective`` refresh
+    policy can leave entirely unrefreshed.  Over-retention tensors pack
+    densely (poison as few banks as possible); short-lived ones stripe
+    for bandwidth."""
+
+    name = "lifetime"
+
+    def bank_order(self, alloc, expected_lifetime_s) -> list:
+        short = (alloc.retention_s is None or expected_lifetime_s is None
+                 or expected_lifetime_s < alloc.retention_s)
+        match, other, empty = [], [], []
+        for pos, b in enumerate(alloc.banks):
+            if not b.resident:
+                empty.append(pos)
+                continue
+            # classify by what is resident *now*: any tensor expected to
+            # outlive retention poisons the bank for short-lived data
+            bank_short = all(
+                alloc.placements[t].expected_lifetime_s is None
+                or alloc.retention_s is None
+                or alloc.placements[t].expected_lifetime_s
+                < alloc.retention_s
+                for t in b.resident)
+            (match if bank_short == short else other).append(pos)
+        return [match, empty, other]
+
+    def dense(self, alloc, expected_lifetime_s) -> bool:
+        return (alloc.retention_s is not None
+                and expected_lifetime_s is not None
+                and expected_lifetime_s >= alloc.retention_s)
+
+
+PLACEMENT_POLICIES = {
+    "pingpong": PingPongPolicy(),
+    "first_fit": FirstFitPolicy(),
+    "lifetime": LifetimePolicy(),
+}
+
+
+def resolve_placement_policy(policy) -> PlacementPolicy:
+    """Resolve a policy name (``ALLOC_POLICIES``) or a
+    :class:`PlacementPolicy` instance; ``ValueError`` otherwise."""
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    try:
+        return PLACEMENT_POLICIES[policy]
+    except (KeyError, TypeError):
+        raise ValueError(f"unknown alloc policy {policy!r}; "
+                         f"choose from {ALLOC_POLICIES}") from None
+
+
+# ------------------------------------------------------ tier-routing seam
+
+class TierPolicy:
+    """Strategy deciding *which tier* a tensor prefers.  ``tier_order``
+    returns tier indices into ``system.tiers`` in preference order; the
+    :class:`MemorySystem` takes the first tier with room (cross-tier
+    fallback) and spills off-chip only when none has."""
+
+    name = "abstract"
+
+    def tier_order(self, system, expected_lifetime_s) -> list:
+        raise NotImplementedError
+
+
+class TieredFirstFitPolicy(TierPolicy):
+    """Tiers in declared order, lifetime-blind — the degenerate routing
+    that reduces a multi-tier system to capacity overflow."""
+
+    name = "tiered_first_fit"
+
+    def tier_order(self, system, expected_lifetime_s) -> list:
+        return list(range(len(system.tiers)))
+
+
+class LifetimeTieredPolicy(TierPolicy):
+    """MCAIMem routing: tensors whose expected data lifetime is under
+    the eDRAM retention floor go to the dense eDRAM tier; tensors that
+    would force refresh there go to the refresh-free SRAM tier.  Unknown
+    lifetimes are treated as short-lived (matching the single-tier
+    ``lifetime`` policy's convention)."""
+
+    name = "lifetime_tiered"
+
+    def tier_order(self, system, expected_lifetime_s) -> list:
+        edram = [k for k, t in enumerate(system.tiers)
+                 if t.cell == "edram"]
+        sram = [k for k, t in enumerate(system.tiers) if t.cell != "edram"]
+        floor = min((system.retentions[k] for k in edram),
+                    default=math.inf)
+        short = (expected_lifetime_s is None
+                 or expected_lifetime_s < floor)
+        return edram + sram if short else sram + edram
+
+
+TIER_POLICY_REGISTRY = {
+    "lifetime_tiered": LifetimeTieredPolicy(),
+    "tiered_first_fit": TieredFirstFitPolicy(),
+}
+
+
+def resolve_tier_policy(policy) -> TierPolicy:
+    if isinstance(policy, TierPolicy):
+        return policy
+    try:
+        return TIER_POLICY_REGISTRY[policy]
+    except (KeyError, TypeError):
+        raise ValueError(f"unknown tier policy {policy!r}; "
+                         f"choose from {TIER_POLICIES}") from None
+
+
+# --------------------------------------------------------- memory system
+
+class MemorySystem:
+    """N memory tiers behind the single-allocator interface the trace
+    replay drives (``place``/``rewrite``/``free``/``touch``/``evict``/
+    ``location``, plus the ``banks``/``spill_bits``/``spilled``/
+    ``evicted`` counters the report reads).
+
+    Each tier owns a full :class:`~repro.memory.allocator.Allocator`
+    over its own :class:`~repro.memory.banks.BankGeometry`; bank
+    ``index`` attributes are renumbered globally (tier 0's banks first),
+    so the flat ``banks`` list, the per-op bank-word tables, and the
+    timeline walk all address one global bank namespace.  A tensor lives
+    wholly in one tier — the fit check is per tier, and a tensor no tier
+    can hold spills off-chip whole (partial spills would split a BFP
+    group's shared exponent from its mantissas).
+
+    ``retentions`` carries each tier's resolved retention floor in
+    seconds (``math.inf`` for SRAM) — the routing policy and the
+    within-tier lifetime coloring both read it.
+    """
+
+    def __init__(self, tiers: Sequence[TierSpec],
+                 retentions: Sequence[float],
+                 policy: str = "lifetime_tiered",
+                 within: str = "pingpong"):
+        from repro.memory.allocator import Allocator
+        self.tiers = tuple(tiers)
+        if not self.tiers:
+            raise ValueError("MemorySystem needs at least one tier")
+        if len(retentions) != len(self.tiers):
+            raise ValueError("one retention floor per tier required")
+        if len({t.word_bits for t in self.tiers}) != 1:
+            raise ValueError(
+                "all tiers must share word_bits: a tensor's BFP words "
+                "must be movable between tiers without repacking")
+        self.retentions = [float(r) for r in retentions]
+        self._tier_policy = resolve_tier_policy(policy)
+        self.policy = self._tier_policy.name
+        self.allocs = []
+        self.offsets = []
+        self.banks = []
+        offset = 0
+        for t, ret in zip(self.tiers, self.retentions):
+            a = Allocator(t.geometry(), policy=within,
+                          retention_s=ret if math.isfinite(ret) else None)
+            for j, b in enumerate(a.banks):
+                b.index = offset + j
+            self.offsets.append(offset)
+            offset += len(a.banks)
+            self.allocs.append(a)
+            self.banks.extend(a.banks)
+        self.placements: dict = {}
+        self._tier_of: dict = {}
+        self.spill_bits = 0.0
+        self.spilled: list = []
+        self.evicted: list = []
+
+    # -- geometry helpers -------------------------------------------------
+    def words_for(self, bits: float) -> int:
+        return self.allocs[0].geometry.words_for(bits)
+
+    def tier_of_bank(self, bank_index: int) -> int:
+        """Tier index owning global bank ``bank_index``."""
+        for k in range(len(self.offsets) - 1, -1, -1):
+            if bank_index >= self.offsets[k]:
+                return k
+        raise IndexError(f"no tier owns bank {bank_index}")
+
+    def tier_banks(self, k: int) -> list:
+        lo = self.offsets[k]
+        return self.banks[lo:lo + self.tiers[k].n_banks]
+
+    def tier_of_tensor(self, tensor: str) -> Optional[int]:
+        return self._tier_of.get(tensor)
+
+    # -- allocation (Allocator-compatible interface) ----------------------
+    def place(self, tensor: str, bits: float, now: float,
+              expected_lifetime_s: Optional[float] = None,
+              lifetime_scale: float = 1.0, reserve_words: int = 0):
+        from repro.memory.allocator import Placement
+        if tensor in self.placements:
+            raise ValueError(f"{tensor} already placed")
+        need = self.words_for(bits)
+        order = self._tier_policy.tier_order(self, expected_lifetime_s)
+        chosen = None
+        for k in order:
+            free = sum(b.free_words for b in self.allocs[k].banks) \
+                - max(0, reserve_words)
+            if need <= free:
+                chosen = k
+                break
+        if chosen is None:
+            self.spill_bits += bits
+            self.spilled.append(tensor)
+            p = Placement(tensor, bits, spans=(),
+                          expected_lifetime_s=expected_lifetime_s)
+            self.placements[tensor] = p
+            return p
+        # the fit pre-check above replicates the sub-allocator's own
+        # spill test, so this delegation can never record a tier spill
+        local = self.allocs[chosen].place(
+            tensor, bits, now, expected_lifetime_s=expected_lifetime_s,
+            lifetime_scale=lifetime_scale, reserve_words=reserve_words)
+        off = self.offsets[chosen]
+        p = Placement(tensor, bits,
+                      spans=tuple((off + i, w) for i, w in local.spans),
+                      expected_lifetime_s=expected_lifetime_s)
+        self.placements[tensor] = p
+        self._tier_of[tensor] = chosen
+        return p
+
+    def rewrite(self, tensor: str, now: float):
+        k = self._tier_of.get(tensor)
+        if k is not None:
+            self.allocs[k].rewrite(tensor, now)
+        return self.placements[tensor]
+
+    def free(self, tensor: str, now: float) -> None:
+        p = self.placements.pop(tensor, None)
+        if p is None:
+            return
+        k = self._tier_of.pop(tensor, None)
+        if k is not None:
+            self.allocs[k].free(tensor, now)
+
+    def touch(self, tensor: str, now: float) -> None:
+        k = self._tier_of.get(tensor)
+        if k is not None:
+            self.allocs[k].touch(tensor, now)
+
+    def evict(self, tensor: str, now: float) -> None:
+        if tensor in self.placements:
+            self.evicted.append(tensor)
+        self.free(tensor, now)
+
+    # -- introspection ----------------------------------------------------
+    def location(self, tensor: str):
+        return self.placements.get(tensor)
+
+    @property
+    def used_bits(self) -> float:
+        return sum(b.occupied_bits for b in self.banks)
+
+    def occupancy(self) -> list:
+        """Per-bank fill fraction across all tiers, in global bank
+        order."""
+        return [b.used_words / b.geometry.words_per_bank
+                for b in self.banks]

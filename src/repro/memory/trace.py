@@ -19,6 +19,7 @@ accounting that fits batch-48 training under a 3.4 µs retention (Fig 23a).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 from repro.core import edram as ed
@@ -26,6 +27,7 @@ from repro.core.schedule import EVENT_KINDS, TraceEvent
 from repro.memory.allocator import Allocator
 from repro.memory.banks import BankGeometry, port_service_s
 from repro.memory.refresh import RefreshScheduler
+from repro.memory.tiers import MemorySystem
 
 # trace-replay engines: "python" is the scalar reference walk below;
 # "vector" is the numpy interval engine (repro.memory.vector), bit-
@@ -34,12 +36,14 @@ from repro.memory.refresh import RefreshScheduler
 REPLAY_BACKENDS = ("python", "vector")
 
 
-def resolve_backend(backend: str, recorder=None) -> str:
-    """Validate ``backend`` and resolve it against the recorder: span
-    recording observes the scalar walk's side effects (per-event
+def resolve_backend(backend: str, recorder=None, tiers=None) -> str:
+    """Validate ``backend`` and resolve it against the run's features:
+    span recording observes the scalar walk's side effects (per-event
     occupancy counters, spill spans), which the vector engine batches
-    away — so a recorder downgrades ``"vector"`` to the reference path
-    with a logged warning rather than silently dropping observability."""
+    away, and a tiered memory system routes tensors through the
+    :class:`~repro.memory.tiers.MemorySystem` the vector engine does not
+    model — either downgrades ``"vector"`` to the reference path with a
+    logged warning rather than silently dropping the feature."""
     if backend not in REPLAY_BACKENDS:
         raise ValueError(f"unknown replay backend {backend!r}; "
                          f"choose from {REPLAY_BACKENDS}")
@@ -48,6 +52,12 @@ def resolve_backend(backend: str, recorder=None) -> str:
         obslog.warn("replay_backend_downgrade", requested="vector",
                     used="python",
                     reason="span_recording_needs_reference_walk")
+        return "python"
+    if backend == "vector" and tiers:
+        from repro.obs import log as obslog
+        obslog.warn("replay_backend_downgrade", requested="vector",
+                    used="python",
+                    reason="tiered_memory_system_needs_reference_walk")
         return "python"
     return backend
 
@@ -143,6 +153,12 @@ class ControllerReport:
     granularity: str = "bank"
     rows_refreshed: int = 0
     row_hidden_frac: float = 0.0
+    # per-tier breakdown (hybrid SRAM+eDRAM replays only): one JSON-safe
+    # summary dict per TierSpec, in tier order — empty tuple on the
+    # classic single-tier replays so their serialized form is unchanged.
+    # Tier read/write/restore/refresh energies sum exactly to the report
+    # totals (the totals are computed as the fold of the per-tier sums).
+    tiers: tuple = ()
 
     @property
     def energy(self) -> ed.MemoryEnergy:
@@ -197,6 +213,22 @@ class ReplayCore:
     # per-(op, bank) word arrays the vectorized closed-loop walk consumes
     # directly; None when the reference walk built this core
     vector: object = None
+    # hybrid SRAM+eDRAM replays only (empty on single-tier cores): the
+    # TierSpecs, one RefreshScheduler per tier (SRAM tiers get a "none"
+    # scheduler at infinite retention), and per-tier traffic energies
+    # whose folds ARE read_j/write_j/restore_j above (exact tier-sum)
+    tiers: tuple = ()
+    scheds: tuple = ()
+    tier_read_j: tuple = ()
+    tier_write_j: tuple = ()
+    tier_restore_j: tuple = ()
+
+    def sched_for(self, bank_index: int) -> RefreshScheduler:
+        """The refresh scheduler owning global bank ``bank_index`` (the
+        single shared one on classic cores)."""
+        if not self.scheds:
+            return self.sched
+        return self.scheds[self.alloc.tier_of_bank(bank_index)]
 
 
 def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
@@ -210,7 +242,8 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                 granularity: str = "bank",
                 reads_restore: bool = False,
                 recorder=None,
-                backend: str = "python") -> ReplayCore:
+                backend: str = "python",
+                tiers=None) -> ReplayCore:
     """Walk ``events`` through allocator placement and traffic-energy
     accounting; returns the :class:`ReplayCore` a stall model finishes.
 
@@ -245,10 +278,18 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     ``backend`` selects the replay engine (``REPLAY_BACKENDS``):
     ``"python"`` is this scalar walk; ``"vector"`` delegates to the
     numpy interval engine (``repro.memory.vector``), which returns a
-    bit-identical core — a recorder downgrades it back to the reference
-    walk (see :func:`resolve_backend`).
+    bit-identical core — a recorder or a tiered memory system downgrades
+    it back to the reference walk (see :func:`resolve_backend`).
+
+    ``tiers`` switches on the hybrid SRAM+eDRAM memory model: a sequence
+    of :class:`~repro.memory.tiers.TierSpec` replaces the homogeneous
+    bank array with a :class:`~repro.memory.tiers.MemorySystem`
+    (``alloc_policy`` then names a *tier* policy, e.g.
+    ``"lifetime_tiered"``), each tier gets its own refresh scheduler
+    (SRAM tiers never refresh) and its own access energies, and the core
+    carries per-tier traffic splits whose folds are the report totals.
     """
-    if resolve_backend(backend, recorder) == "vector":
+    if resolve_backend(backend, recorder, tiers=tiers) == "vector":
         from repro.memory import vector as vec
         return vec.replay_core_vector(
             events, cfg, temp_c=temp_c, duration_s=duration_s,
@@ -256,12 +297,46 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             freq_hz=freq_hz, sample_scale=sample_scale,
             refresh_guard=refresh_guard, retention_s=retention_s,
             granularity=granularity, reads_restore=reads_restore)
-    geom = BankGeometry.from_edram(cfg)
-    sched = RefreshScheduler(refresh_policy, temp_c, guard=refresh_guard,
-                             retention_s=retention_s,
-                             granularity=granularity)
-    alloc = Allocator(geom, policy=alloc_policy,
-                      retention_s=sched.retention_s)
+    tier_specs = tuple(tiers) if tiers else ()
+    if tier_specs:
+        scheds = []
+        for t in tier_specs:
+            if t.cell == "sram":
+                scheds.append(RefreshScheduler(
+                    "none", temp_c, guard=refresh_guard,
+                    retention_s=math.inf, granularity=granularity))
+            else:
+                scheds.append(RefreshScheduler(
+                    refresh_policy, temp_c, guard=refresh_guard,
+                    retention_s=(t.retention_s if t.retention_s is not None
+                                 else retention_s),
+                    granularity=granularity))
+        edram_scheds = [s for t, s in zip(tier_specs, scheds)
+                        if t.cell == "edram"]
+        # the report-level retention/interval are the decaying (eDRAM)
+        # tier's — the quantity the refresh verdict is about
+        sched = edram_scheds[0] if edram_scheds else scheds[0]
+        alloc = MemorySystem(tier_specs,
+                             [s.retention_s for s in scheds],
+                             policy=alloc_policy)
+        # nominal geometry: only word_bits matters to this walk (words_for
+        # in the prepasses and _touch); per-bank capacities live on each
+        # BankState's own geometry
+        geom = BankGeometry(
+            word_bits=tier_specs[0].word_bits,
+            words_per_bank=max(t.geometry().words_per_bank
+                               for t in tier_specs),
+            n_banks=len(alloc.banks),
+            rows_per_bank=max(t.rows_per_bank for t in tier_specs))
+    else:
+        scheds = None
+        geom = BankGeometry.from_edram(cfg)
+        sched = RefreshScheduler(refresh_policy, temp_c,
+                                 guard=refresh_guard,
+                                 retention_s=retention_s,
+                                 granularity=granularity)
+        alloc = Allocator(geom, policy=alloc_policy,
+                          retention_s=sched.retention_s)
     if recorder is not None:
         def _sample_occupancy(bank, now):
             recorder.counter("occupied_words", now, bank.used_words,
@@ -305,8 +380,19 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             cur_w -= live_w.pop(ev.tensor, 0)
 
     read_j = write_j = offchip_j = restore_j = 0.0
+    # tiered mode accumulates traffic energy per tier (each tier has its
+    # own pJ/bit); the totals are the folds of these lists, so per-tier
+    # energies sum to the report totals *exactly*
+    t_read = [0.0] * len(tier_specs)
+    t_write = [0.0] * len(tier_specs)
+    t_restore = [0.0] * len(tier_specs)
     transient_now_w = 0               # on-chip streamed words right now
     offchip_bits = 0.0
+
+    def _traffic_total() -> float:
+        if tier_specs:
+            return sum(t_read) + sum(t_write) + offchip_j
+        return read_j + write_j + offchip_j
     # per-op, per-bank words touched (the conflict model's unit)
     op_read_words: dict[str, dict[int, int]] = {}
     op_write_words: dict[str, dict[int, int]] = {}
@@ -348,14 +434,19 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                         recorder.span("spill", ev.tensor, ev.time, ev.time,
                                       op=ev.op, io="write", bits=ev.bits)
                 else:
-                    write_j += ev.bits * cfg.write_pj_per_bit * 1e-12
+                    if tier_specs:
+                        k = alloc.tier_of_bank(p.spans[0][0])
+                        t_write[k] += ev.bits \
+                            * tier_specs[k].write_pj_per_bit * 1e-12
+                    else:
+                        write_j += ev.bits * cfg.write_pj_per_bit * 1e-12
                     for b_idx, _ in p.spans:
                         alloc.banks[b_idx].write_bits += \
                             ev.bits / max(1, len(p.spans))
                     _touch(op_write_words, ev.op, p, ev.bits)
                 if recorder is not None:
                     recorder.counter("traffic_j", ev.time,
-                                     read_j + write_j + offchip_j)
+                                     _traffic_total())
         elif ev.kind == "read":
             p = alloc.location(ev.tensor)
             if p is None or p.offchip:
@@ -365,23 +456,39 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
                     recorder.span("spill", ev.tensor, ev.time, ev.time,
                                   op=ev.op, io="read", bits=ev.bits)
             else:
-                pj = cfg.read_pj_per_bit
-                if reads_restore:
-                    # destructive read + write-back: the restore phase of
-                    # a refresh pulse rides every read, and the row's
-                    # decay clock restarts (touch) — this is what lets
-                    # ``selective`` skip refreshing well-read banks.
-                    pj += cfg.refresh_restore_pj
-                    restore_j += ev.bits * cfg.refresh_restore_pj * 1e-12
-                    alloc.touch(ev.tensor, ev.time)
-                read_j += ev.bits * pj * 1e-12
+                if tier_specs:
+                    k = alloc.tier_of_bank(p.spans[0][0])
+                    pj = tier_specs[k].read_pj_per_bit
+                    if reads_restore:
+                        # SRAM reads are non-destructive: the tier's
+                        # restore phase is 0 pJ, so only decaying tiers
+                        # pay the write-back (touch still resets clocks)
+                        pj += tier_specs[k].refresh_restore_pj_per_bit
+                        t_restore[k] += ev.bits \
+                            * tier_specs[k].refresh_restore_pj_per_bit \
+                            * 1e-12
+                        alloc.touch(ev.tensor, ev.time)
+                    t_read[k] += ev.bits * pj * 1e-12
+                else:
+                    pj = cfg.read_pj_per_bit
+                    if reads_restore:
+                        # destructive read + write-back: the restore
+                        # phase of a refresh pulse rides every read, and
+                        # the row's decay clock restarts (touch) — this
+                        # is what lets ``selective`` skip refreshing
+                        # well-read banks.
+                        pj += cfg.refresh_restore_pj
+                        restore_j += ev.bits * cfg.refresh_restore_pj \
+                            * 1e-12
+                        alloc.touch(ev.tensor, ev.time)
+                    read_j += ev.bits * pj * 1e-12
                 for b_idx, _ in p.spans:
                     alloc.banks[b_idx].read_bits += \
                         ev.bits / max(1, len(p.spans))
                 _touch(op_read_words, ev.op, p, ev.bits)
             if recorder is not None:
                 recorder.counter("traffic_j", ev.time,
-                                 read_j + write_j + offchip_j)
+                                 _traffic_total())
         elif ev.kind in ("free", "evict"):
             p = alloc.location(ev.tensor)
             if not ev.buffered and p is not None and not p.offchip:
@@ -394,6 +501,12 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
     for b in alloc.banks:
         b.finalize(duration_s)
 
+    if tier_specs:
+        # totals ARE the folds of the per-tier splits (exact tier-sum)
+        read_j = sum(t_read)
+        write_j = sum(t_write)
+        restore_j = sum(t_restore)
+
     return ReplayCore(
         cfg=cfg, geom=geom, sched=sched, alloc=alloc,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
@@ -401,7 +514,69 @@ def replay_core(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         read_j=read_j, write_j=write_j, offchip_j=offchip_j,
         offchip_bits=offchip_bits,
         op_read_words=op_read_words, op_write_words=op_write_words,
-        restore_j=restore_j)
+        restore_j=restore_j,
+        tiers=tier_specs,
+        scheds=tuple(scheds) if scheds else (),
+        tier_read_j=tuple(t_read), tier_write_j=tuple(t_write),
+        tier_restore_j=tuple(t_restore))
+
+
+def account_refresh(core: ReplayCore, duration_s: float, *,
+                    placements: Optional[dict] = None,
+                    pulse_stats: Optional[dict] = None) -> list:
+    """Run the refresh energy/stall accounting for a finished core —
+    one scheduler over the whole array on classic cores, one scheduler
+    per tier (with that tier's refresh energies) on hybrid cores.  The
+    returned decisions are in global bank order either way, ready for
+    :func:`build_report`'s ``zip`` against ``core.alloc.banks``."""
+    if not core.tiers:
+        return core.sched.account(core.alloc.banks, duration_s,
+                                  core.freq_hz,
+                                  core.cfg.refresh_read_pj,
+                                  core.cfg.refresh_restore_pj,
+                                  placements=placements,
+                                  pulse_stats=pulse_stats)
+    decisions: list = []
+    for k, (tier, sched) in enumerate(zip(core.tiers, core.scheds)):
+        decisions.extend(sched.account(
+            core.alloc.tier_banks(k), duration_s, core.freq_hz,
+            tier.refresh_read_pj_per_bit, tier.refresh_restore_pj_per_bit,
+            placements=placements, pulse_stats=pulse_stats))
+    return decisions
+
+
+def _tier_summaries(core: ReplayCore, banks: Sequence,
+                    decisions: Sequence) -> tuple:
+    """JSON-safe per-tier summary dicts for ``ControllerReport.tiers``
+    (``banks`` are the finished :class:`BankReport` rows)."""
+    out = []
+    for k, tier in enumerate(core.tiers):
+        lo = core.alloc.offsets[k]
+        hi = lo + tier.n_banks
+        tb, td = banks[lo:hi], decisions[lo:hi]
+        retention = core.scheds[k].retention_s
+        refresh_read_j = sum(d.refresh_read_j for d in td)
+        refresh_restore_j = sum(d.refresh_restore_j for d in td)
+        out.append({
+            "name": tier.name, "cell": tier.cell,
+            "n_banks": tier.n_banks, "bank_start": lo,
+            "capacity_bits": tier.capacity_bits,
+            "retention_s": retention if math.isfinite(retention) else None,
+            "read_j": core.tier_read_j[k],
+            "write_j": core.tier_write_j[k],
+            "restore_j": core.tier_restore_j[k],
+            "refresh_read_j": refresh_read_j,
+            "refresh_restore_j": refresh_restore_j,
+            "refresh_j": refresh_read_j + refresh_restore_j,
+            "refresh_count": sum(b.refresh_count for b in tb),
+            "refresh_stall_s": sum(d.stall_s for d in td),
+            "refresh_hidden_j": sum(d.refresh_hidden_j for d in td),
+            "read_bits": sum(b.read_bits for b in tb),
+            "write_bits": sum(b.write_bits for b in tb),
+            "peak_words": sum(b.peak_words for b in tb),
+            "leakage_mw": tier.leakage_mw,
+        })
+    return tuple(out)
 
 
 def build_report(core: ReplayCore, decisions: Sequence, *,
@@ -411,10 +586,29 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
     and the refresh scheduler's per-bank decisions.  Shared by the
     additive model (:func:`replay`) and the timeline engine
     (``repro.sim.timeline``)."""
-    refresh_read_j = sum(d.refresh_read_j for d in decisions)
-    refresh_restore_j = sum(d.refresh_restore_j for d in decisions)
-    refresh_stall = sum(d.stall_s for d in decisions)
-    refresh_hidden_j = sum(d.refresh_hidden_j for d in decisions)
+    if core.tiers:
+        # fold per tier first, then fold the tier sums — the report
+        # totals then equal the sum of the per-tier summary fields
+        # exactly (the tier-sum invariant the property suite pins)
+        slices = [(core.alloc.offsets[k],
+                   core.alloc.offsets[k] + t.n_banks)
+                  for k, t in enumerate(core.tiers)]
+        refresh_read_j = sum(sum(d.refresh_read_j
+                                 for d in decisions[lo:hi])
+                             for lo, hi in slices)
+        refresh_restore_j = sum(sum(d.refresh_restore_j
+                                    for d in decisions[lo:hi])
+                                for lo, hi in slices)
+        refresh_stall = sum(sum(d.stall_s for d in decisions[lo:hi])
+                            for lo, hi in slices)
+        refresh_hidden_j = sum(sum(d.refresh_hidden_j
+                                   for d in decisions[lo:hi])
+                               for lo, hi in slices)
+    else:
+        refresh_read_j = sum(d.refresh_read_j for d in decisions)
+        refresh_restore_j = sum(d.refresh_restore_j for d in decisions)
+        refresh_stall = sum(d.stall_s for d in decisions)
+        refresh_hidden_j = sum(d.refresh_hidden_j for d in decisions)
     rows_refreshed = sum(d.rows_refreshed for d in decisions)
     rows_hidden = (sum(d.hidden_count for d in decisions)
                    if core.sched.granularity == "row" else 0)
@@ -425,13 +619,16 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
             refresh_bits=b.refresh_bits, refresh_count=b.refresh_count,
             refresh_j=d.refresh_j, stall_s=b.stall_s,
             peak_words=b.peak_words,
-            peak_occupancy=b.peak_words / core.geom.words_per_bank,
+            peak_occupancy=b.peak_words / b.geometry.words_per_bank,
             max_resident_lifetime_s=b.max_resident_s,
             needs_refresh=d.needs_refresh, refreshed=d.refreshed,
             busy_s=b.busy_s, refresh_hidden=d.hidden_count,
             pulse_exceeds_retention=d.pulse_exceeds_retention,
             rows_refreshed=d.rows_refreshed)
         for b, d in zip(core.alloc.banks, decisions))
+
+    tier_rows = (_tier_summaries(core, banks, tuple(decisions))
+                 if core.tiers else ())
 
     return ControllerReport(
         refresh_policy=core.refresh_policy, alloc_policy=core.alloc_policy,
@@ -454,7 +651,8 @@ def build_report(core: ReplayCore, decisions: Sequence, *,
         granularity=core.sched.granularity,
         rows_refreshed=rows_refreshed,
         row_hidden_frac=(rows_hidden / rows_refreshed
-                         if rows_refreshed else 0.0))
+                         if rows_refreshed else 0.0),
+        tiers=tier_rows)
 
 
 def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
@@ -469,7 +667,8 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
            granularity: str = "bank",
            reads_restore: bool = False,
            recorder=None,
-           backend: str = "python") -> ControllerReport:
+           backend: str = "python",
+           tiers=None) -> ControllerReport:
     """Replay ``events`` through the bank-level controller with the
     **additive** stall model (the cross-validation baseline; the
     closed-loop model lives in ``repro.sim.timeline``).
@@ -509,8 +708,14 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
             model for that).
         backend: replay engine (``REPLAY_BACKENDS``) — ``"python"``
             (the scalar reference walk) or ``"vector"`` (the numpy
-            interval engine, bit-identical reports); a recorder
-            downgrades ``"vector"`` (see :func:`resolve_backend`).
+            interval engine, bit-identical reports); a recorder or a
+            tiered memory system downgrades ``"vector"`` (see
+            :func:`resolve_backend`).
+        tiers: optional :class:`~repro.memory.tiers.TierSpec` sequence —
+            replay against a hybrid SRAM+eDRAM
+            :class:`~repro.memory.tiers.MemorySystem` (see
+            :func:`replay_core`); the report then carries per-tier
+            summaries in ``ControllerReport.tiers``.
 
     Returns:
         A :class:`ControllerReport` (energies in J, stalls in s) with
@@ -522,7 +727,7 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
         granularity=granularity, reads_restore=reads_restore,
-        recorder=recorder, backend=backend)
+        recorder=recorder, backend=backend, tiers=tiers)
     if recorder is not None:
         recorder.meta.update(timing="additive", schedule_s=duration_s,
                              granularity=granularity, temp_c=temp_c,
@@ -552,8 +757,6 @@ def replay(events: Sequence[TraceEvent], cfg: ed.EDRAMConfig, *,
 
     # residencies were scaled per tensor at the bank level, so account()
     # compares them against retention directly (lifetime_scale=1)
-    decisions = core.sched.account(core.alloc.banks, duration_s, freq_hz,
-                                   cfg.refresh_read_pj,
-                                   cfg.refresh_restore_pj)
+    decisions = account_refresh(core, duration_s)
     return build_report(core, decisions, conflict_stall_s=stall_s,
                         timing="additive")

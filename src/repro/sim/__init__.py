@@ -54,15 +54,16 @@ from repro.sim.pipeline import (DEFAULT_PIPELINE, DEFAULT_STAGES,
 from repro.sim.report import ArmReport
 from repro.sim.timeline import (TIMELINE_PIPELINE, replay_timeline,
                                 stage_timeline)
+from repro.sim.hybrid import HYBRID_SPLIT, hybrid_arm, hybrid_system
 
 __all__ = [
     "ARM_REGISTRY", "Arm", "ArmReport", "CostModel", "DEFAULT_PIPELINE",
     "DEFAULT_STAGES", "DEFAULT_TIMING", "DVFSState", "FixedClock",
-    "ITERS_CHAIN", "ITERS_TARGET", "OperatingPoint", "Pipeline",
-    "SimContext", "TIMELINE_PIPELINE", "TIMINGS", "WORKLOAD_KINDS",
-    "WorkloadSpec", "arms", "get_arm", "op_timer", "register_arm",
-    "replay_timeline", "resolve_cost", "resolve_pipeline", "run",
-    "stage_timeline", "sweep",
+    "HYBRID_SPLIT", "ITERS_CHAIN", "ITERS_TARGET", "OperatingPoint",
+    "Pipeline", "SimContext", "TIMELINE_PIPELINE", "TIMINGS",
+    "WORKLOAD_KINDS", "WorkloadSpec", "arms", "get_arm", "hybrid_arm",
+    "hybrid_system", "op_timer", "register_arm", "replay_timeline",
+    "resolve_cost", "resolve_pipeline", "run", "stage_timeline", "sweep",
 ]
 
 # side-effect: registers the serving arm family (Serve/always|skip|

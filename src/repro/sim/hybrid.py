@@ -1,0 +1,69 @@
+"""The ``Hybrid+CAMEL`` arm family: reversible training on a mixed
+SRAM+eDRAM memory at an iso-area capacity split (MCAIMem, arXiv
+2312.03559, on the CAMEL §V stack).
+
+The Fig-24 comparison has two homogeneous memory endpoints — the
+all-eDRAM ``DuDNN+CAMEL`` arm (dense, but over-retention tensors force
+refresh at high temperature) and the all-SRAM ``FR+SRAM`` baseline
+(refresh-free, but half the capacity per area and an irreversible
+training recipe that spills to DRAM).  :func:`hybrid_arm` fills in the
+continuum: same reversible DuDNN workload as ``DuDNN+CAMEL``, but the
+bank array is split at equal silicon area between a refresh-free SRAM
+tier and a dense eDRAM tier (:func:`repro.memory.tiers.iso_area_tiers`),
+with the ``lifetime_tiered`` policy routing over-retention tensors to
+SRAM and transients to eDRAM.  At an interior split the hybrid keeps
+(most of) eDRAM's capacity while paying zero refresh — the mixed-cell
+win ``benchmarks/tier_sweep.py`` sweeps and ``tests/test_tiers.py``
+pins.
+
+The endpoints delegate to the registered arms themselves
+(``hybrid_arm(0.0) is get_arm("DuDNN+CAMEL")``), so endpoint records in
+``BENCH_tiers.json`` match the existing Fig-24 records exactly by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import hwmodel as hw
+from repro.memory.tiers import iso_area_tiers
+from repro.sim.arm import ITERS_TARGET, Arm, get_arm, register_arm
+
+# the canonical registered split: 1/4 of the array area as SRAM — enough
+# for the DuDNN workload's over-retention tensors across the Fig-23
+# temperature range, while keeping 3/4 of the area at eDRAM density
+HYBRID_SPLIT = 0.25
+
+
+def hybrid_system(sram_split: float, *,
+                  name: str = "Hybrid+CAMEL") -> hw.SystemConfig:
+    """A ``SystemConfig`` whose memory is the iso-area hybrid at
+    ``sram_split`` (SRAM area share in [0, 1])."""
+    base = hw.SystemConfig(name=name)
+    tiers = iso_area_tiers(base.edram, sram_split,
+                           sram_banks=base.sram_banks)
+    return dataclasses.replace(
+        base, tiers=tiers, alloc_policy="lifetime_tiered",
+        use_edram=True,
+        onchip_bits=sum(t.capacity_bits for t in tiers))
+
+
+def hybrid_arm(sram_split: float = HYBRID_SPLIT) -> Arm:
+    """The hybrid arm at one iso-area split.  The endpoints return the
+    registered homogeneous arms themselves — ``DuDNN+CAMEL`` at
+    ``sram_split=0`` (all-eDRAM) and ``FR+SRAM`` at ``sram_split=1``
+    (all-SRAM at iso-area: exactly the FR baseline's 4×48 KB) — so
+    endpoint comparisons are exact by construction, not approximately
+    re-derived."""
+    s = float(sram_split)
+    if s <= 0.0:
+        return get_arm("DuDNN+CAMEL")
+    if s >= 1.0:
+        return get_arm("FR+SRAM")
+    return Arm(name=f"Hybrid+CAMEL@{s:g}", system=hybrid_system(s),
+               reversible=True, iters_to_target=ITERS_TARGET)
+
+
+register_arm(Arm(name="Hybrid+CAMEL",
+                 system=hybrid_system(HYBRID_SPLIT),
+                 reversible=True, iters_to_target=ITERS_TARGET))

@@ -169,7 +169,12 @@ def memory_config(cfg: hw.SystemConfig):
     """The controller-replay parameters an arm's system implies:
     ``(mem_cfg, retention_s, refresh_policy)``.  eDRAM arms replay their
     own geometry; the SRAM baseline replays the same bank machinery with
-    an infinite retention floor and refresh disabled."""
+    an infinite retention floor and refresh disabled.  Tiered arms
+    (``cfg.tiers``) carry their geometry and retention floors on the
+    ``TierSpec``s themselves — the eDRAM config only supplies the
+    off-chip energy and the per-tier defaults."""
+    if cfg.tiers:
+        return cfg.edram, None, cfg.refresh_policy
     if cfg.use_edram:
         return cfg.edram, None, cfg.refresh_policy
     # SRAM holds data indefinitely: infinite retention, never refresh
@@ -192,7 +197,7 @@ def stage_memory(arm: Arm, ctx: SimContext) -> None:
         op_durations=ctx.op_durations, retention_s=retention,
         granularity=cfg.refresh_granularity,
         reads_restore=cfg.reads_restore, recorder=ctx.recorder,
-        backend=cfg.replay_backend)
+        backend=cfg.replay_backend, tiers=cfg.tiers)
 
 
 def _buffered_partition(events) -> tuple[float, list]:
@@ -221,17 +226,20 @@ def _scalar_memory(arm: Arm, ctx: SimContext):
     transients on-chip, whole-iteration buffers held greedily until
     capacity runs out, one store + one load per spilled buffer.
 
-    Only tight while the streamed working set fits on-chip: when even the
-    per-sample transients overflow capacity, the controller models their
-    spills too and the closed form (which assumes all streamed traffic
-    stays on-chip) undercounts — ``ArmReport.oracle_rel_err`` surfaces
-    the gap.
+    When even the per-sample transients overflow on-chip capacity, the
+    proportional overflow term below moves the overflowing share of the
+    streamed traffic off-chip — a first-order model of the controller's
+    per-tensor spills (it has no placement order), so ``oracle_rel_err``
+    stays a useful cross-check instead of growing with the overflow
+    (the PR 2 carried-over debt).  On the pinned workloads the streamed
+    set fits and the term is exactly zero.
 
     Returns ``(MemoryEnergy, offchip_bits, refresh_free)``.
     """
     cfg = arm.system
     transient_peak, saves = _buffered_partition(ctx.events)
-    budget = cfg.onchip_bits - transient_peak / ctx.batch
+    stream_bits = transient_peak / ctx.batch
+    budget = cfg.onchip_bits - stream_bits
     held = spilled = 0.0
     for _, bits in saves:
         if held + bits <= budget:
@@ -242,6 +250,16 @@ def _scalar_memory(arm: Arm, ctx: SimContext):
     # a spilled buffer's store/load traffic moves off-chip, not on-chip
     read_bits = ctx.read_bits - spilled
     write_bits = ctx.write_bits - spilled
+    overflow = max(0.0, stream_bits - cfg.onchip_bits)
+    if overflow > 0.0:
+        # streamed transients themselves overflow capacity: the
+        # overflowing fraction of the streamed working set forces the
+        # same fraction of the remaining on-chip traffic through DRAM
+        frac = overflow / stream_bits
+        off_r, off_w = read_bits * frac, write_bits * frac
+        offchip_bits += off_r + off_w
+        read_bits -= off_r
+        write_bits -= off_w
     if cfg.use_edram:
         rf = ed.refresh_free(ctx.max_lifetime_s, cfg.temp_c)
         mem = ed.edram_energy(cfg.edram, read_bits, write_bits,
@@ -293,10 +311,16 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
     # looking free on energy (opt-in: see SystemConfig.charge_leakage)
     leakage_j = 0.0
     if cfg.charge_leakage:
-        mw_per_kb = (cfg.edram.leakage_mw_per_kb if cfg.use_edram
-                     else cfg.edram.sram_leakage_mw_per_kb)
-        leakage_j = mw_per_kb * 1e-3 * (cfg.onchip_bits / 8.0 / 1024.0) \
-            * latency_s
+        if cfg.tiers:
+            # each tier leaks at its own cell's rate over its own
+            # capacity (the SRAM share is what the iso-area sweep pays)
+            leakage_j = sum(t.leakage_mw * 1e-3 * latency_s
+                            for t in cfg.tiers)
+        else:
+            mw_per_kb = (cfg.edram.leakage_mw_per_kb if cfg.use_edram
+                         else cfg.edram.sram_leakage_mw_per_kb)
+            leakage_j = mw_per_kb * 1e-3 \
+                * (cfg.onchip_bits / 8.0 / 1024.0) * latency_s
     energy_j = compute_j + memory_j + leakage_j
     rel_err = (abs(memory_j - scalar_mem.total_j) / scalar_mem.total_j
                if scalar_mem.total_j > 0 else 0.0)
@@ -334,6 +358,8 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
                                  if ctrl is not None else False),
         timeline=(dict(ctrl.timeline)
                   if ctrl is not None and ctrl.timeline else {}),
+        tiers=(tuple(dict(t) for t in ctrl.tiers)
+               if ctrl is not None and ctrl.tiers else ()),
         config=_config_dict(arm),
         memory=_memory_dict(ctrl),
         controller=ctrl,
@@ -343,12 +369,17 @@ def stage_energy(arm: Arm, ctx: SimContext) -> None:
 
 def _config_dict(arm: Arm) -> dict:
     """The fully resolved arm as a JSON-safe dict."""
+    system = dataclasses.asdict(arm.system)
+    if system.get("tiers"):
+        # asdict keeps the TierSpec tuple a tuple; JSON reads it back as
+        # a list, so serialize it as one for a lossless round trip
+        system["tiers"] = [dict(t) for t in system["tiers"]]
     return {
         "name": arm.name,
         "reversible": arm.reversible,
         "iters_to_target": arm.iters_to_target,
         "cost": cost_dict(arm.cost),
-        "system": dataclasses.asdict(arm.system),
+        "system": system,
         "workload": (dataclasses.asdict(arm.workload)
                      if arm.workload is not None and arm.blocks is None
                      else None),
@@ -361,7 +392,7 @@ def _memory_dict(ctrl) -> dict:
     """ControllerReport as a JSON-safe dict (empty-ish on the scalar path)."""
     if ctrl is None:
         return {"mode": "scalar", "banks": [], "spilled": []}
-    return {
+    out = {
         "mode": "controller",
         "timing": ctrl.timing,
         "refresh_policy": ctrl.refresh_policy,
@@ -398,6 +429,11 @@ def _memory_dict(ctrl) -> dict:
         "timeline": dict(ctrl.timeline) if ctrl.timeline else None,
         "banks": [dataclasses.asdict(b) for b in ctrl.banks],
     }
+    # only hybrid replays carry tiers; omitted otherwise so the classic
+    # reports' serialized shape (and their golden pins) stays unchanged
+    if ctrl.tiers:
+        out["tiers"] = [dict(t) for t in ctrl.tiers]
+    return out
 
 
 # ---------------------------------------------------------------- pipeline
@@ -568,9 +604,24 @@ def _with_freq(arm: Arm, f) -> Arm:
     return arm.with_cost(FixedClock(freq_hz=float(f)))
 
 
-def _expand_grid(arms: Sequence[Arm], workloads, temps, freqs) -> list:
-    """``arms × workloads × temps × freqs`` as concrete arms, in
-    deterministic (arms-outer, freqs-inner) order."""
+def _with_split(arm: Arm, s) -> Arm:
+    """One iso-area-split grid point: replace the arm's memory with the
+    hybrid SRAM+eDRAM tiering at SRAM area share ``s`` (see
+    ``repro.memory.tiers.iso_area_tiers``) under the ``lifetime_tiered``
+    routing policy.  ``onchip_bits`` tracks the tiers' total capacity so
+    the scalar oracle sees the same budget the controller enforces."""
+    from repro.memory.tiers import iso_area_tiers
+    tiers = iso_area_tiers(arm.system.edram, float(s),
+                           sram_banks=arm.system.sram_banks)
+    return arm.with_system(
+        tiers=tiers, alloc_policy="lifetime_tiered", use_edram=True,
+        onchip_bits=sum(t.capacity_bits for t in tiers))
+
+
+def _expand_grid(arms: Sequence[Arm], workloads, temps, freqs,
+                 splits=None) -> list:
+    """``arms × workloads × temps × freqs × splits`` as concrete arms,
+    in deterministic (arms-outer, splits-inner) order."""
     out = []
     for arm in arms:
         for wl in (workloads if workloads is not None else (None,)):
@@ -583,7 +634,9 @@ def _expand_grid(arms: Sequence[Arm], workloads, temps, freqs) -> list:
             for t in (temps if temps is not None else (None,)):
                 at = a if t is None else a.with_system(temp_c=t)
                 for f in (freqs if freqs is not None else (None,)):
-                    out.append(at if f is None else _with_freq(at, f))
+                    af = at if f is None else _with_freq(at, f)
+                    for s in (splits if splits is not None else (None,)):
+                        out.append(af if s is None else _with_split(af, s))
     return out
 
 
@@ -599,6 +652,7 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
           workloads: Optional[Sequence] = None,
           temps: Optional[Sequence[float]] = None,
           freqs: Optional[Sequence] = None,
+          splits: Optional[Sequence[float]] = None,
           parallel=None, profile: bool = False,
           progress=None) -> list:
     """Simulate a grid of arms; one :class:`ArmReport` per grid point.
@@ -618,6 +672,12 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
             (e.g. ``DVFSState``; installed via ``Arm.with_cost``).
             Retention deadlines stay wall-clock, so refresh hiding and
             the refresh-free verdict move across this axis.
+        splits: optional iso-area SRAM:eDRAM capacity-split axis — each
+            entry is an SRAM area share in [0, 1]; the grid point
+            replaces the arm's memory with the hybrid tiering from
+            ``repro.memory.tiers.iso_area_tiers`` under the
+            ``lifetime_tiered`` routing policy (``0.0`` is the stock
+            all-eDRAM array, ``1.0`` the all-SRAM iso-area equivalent).
         parallel: ``None``/``0``/``1`` → sequential; ``True`` → one
             worker per CPU; an int → that many process-pool workers.
         profile: wall-clock each grid point's stages into its report's
@@ -633,12 +693,12 @@ def sweep(arms: Sequence[Arm], pipeline: Optional[Pipeline] = None, *,
 
     Returns:
         Reports in deterministic grid order — ``arms`` outermost, then
-        ``workloads``, then ``temps``, then ``freqs`` — identical
-        regardless of ``parallel`` (results are collected in submission
-        order).
+        ``workloads``, then ``temps``, then ``freqs``, then ``splits``
+        — identical regardless of ``parallel`` (results are collected
+        in submission order).
     """
     resolve_pipeline(timing, pipeline)      # validate eagerly
-    grid = _expand_grid(arms, workloads, temps, freqs)
+    grid = _expand_grid(arms, workloads, temps, freqs, splits)
     jobs = [(a, timing, pipeline, profile) for a in grid]
     if progress is True:
         from repro.obs import log as _obslog

@@ -62,6 +62,12 @@ class ArmReport:
     # timeline-model summary (makespan, pushback, pulse placement counts);
     # empty dict under additive/scalar timing
     timeline: dict = dataclasses.field(default_factory=dict)
+    # per-tier breakdown (hybrid SRAM+eDRAM arms only): one JSON-safe
+    # summary dict per memory tier (name, cell, capacity, traffic/
+    # refresh/leakage energies — see repro.memory.tiers).  Empty tuple
+    # on single-tier arms — serialized only when non-empty, so their
+    # historical to_dict() shape is unchanged
+    tiers: tuple = ()
     # serving-workload summary (repro.serve arms only): tokens served,
     # tokens/s, J/token, per-request latency percentiles, KV-policy
     # counters (entries evicted/recomputed, restore_j).  Empty dict on
@@ -101,6 +107,8 @@ class ArmReport:
         d["timeline"] = self.timeline
         d["config"] = self.config
         d["memory"] = self.memory
+        if self.tiers:
+            d["tiers"] = list(self.tiers)
         if self.serving:
             d["serving"] = self.serving
         if self.profile:
@@ -111,4 +119,9 @@ class ArmReport:
     def from_dict(cls, d: dict) -> "ArmReport":
         known = {f.name for f in dataclasses.fields(cls)} - {"controller",
                                                              "trace"}
-        return cls(**{k: v for k, v in d.items() if k in known})
+        kw = {k: v for k, v in d.items() if k in known}
+        if "tiers" in kw:
+            # JSON round-trip turns the tuple into a list; restore it so
+            # from_dict(to_dict(r)) == r holds field-for-field
+            kw["tiers"] = tuple(kw["tiers"])
+        return cls(**kw)

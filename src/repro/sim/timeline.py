@@ -118,7 +118,8 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
                     retention_s=None, granularity: str = "bank",
                     reads_restore: bool = False,
                     recorder=None,
-                    backend: str = "python") -> mtr.ControllerReport:
+                    backend: str = "python",
+                    tiers=None) -> mtr.ControllerReport:
     """Replay ``events`` with the closed-loop timeline model.
 
     Same contract as :func:`repro.memory.trace.replay` (energies in J,
@@ -144,18 +145,19 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
     ``backend="vector"`` runs the whole engine — replay core, closed-loop
     walk, pulse placement — on the numpy interval engine
     (``repro.memory.vector``); the report is bit-identical.  A recorder
-    downgrades the request to the reference path with a logged warning
-    (``mtr.resolve_backend``), since span recording observes the scalar
-    walks' per-event side effects.
+    or a tiered memory system (``tiers=``) downgrades the request to the
+    reference path with a logged warning (``mtr.resolve_backend``),
+    since span recording and tier routing observe the scalar walks'
+    per-event side effects.
     """
-    backend = mtr.resolve_backend(backend, recorder)
+    backend = mtr.resolve_backend(backend, recorder, tiers=tiers)
     core = mtr.replay_core(
         events, cfg, temp_c=temp_c, duration_s=duration_s,
         refresh_policy=refresh_policy, alloc_policy=alloc_policy,
         freq_hz=freq_hz, sample_scale=sample_scale,
         refresh_guard=refresh_guard, retention_s=retention_s,
         granularity=granularity, reads_restore=reads_restore,
-        recorder=recorder, backend=backend)
+        recorder=recorder, backend=backend, tiers=tiers)
 
     if backend == "vector":
         from repro.memory import vector as vec
@@ -163,9 +165,8 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
         makespan = max(makespan, duration_s)
         conflict_stall_s = makespan - duration_s
         bank_pulses = vec.place_all_pulses_vector(core, makespan)
-        decisions = core.sched.account(
-            core.alloc.banks, duration_s, core.freq_hz,
-            cfg.refresh_read_pj, cfg.refresh_restore_pj,
+        decisions = mtr.account_refresh(
+            core, duration_s,
             pulse_stats={i: (bp.count, bp.stall_s, bp.hidden_count)
                          for i, bp in bank_pulses.items()})
         n_pulses = sum(bp.count for bp in bank_pulses.values())
@@ -176,14 +177,16 @@ def replay_timeline(events, cfg, *, op_schedule, temp_c: float,
         conflict_stall_s = makespan - duration_s
 
         # place one pulse per retention tick into each refreshed bank's
-        # idle windows on the *pushed-back* timeline
+        # idle windows on the *pushed-back* timeline; each bank asks the
+        # scheduler that owns it (one per tier on hybrid cores — SRAM
+        # tiers never refresh, so they place nothing)
         placements = {
-            b.index: core.sched.place_pulses(b, makespan, core.freq_hz)
-            for b in core.alloc.banks if core.sched.would_refresh(b)}
-        decisions = core.sched.account(
-            core.alloc.banks, duration_s, core.freq_hz,
-            cfg.refresh_read_pj, cfg.refresh_restore_pj,
-            placements=placements)
+            b.index: core.sched_for(b.index).place_pulses(
+                b, makespan, core.freq_hz)
+            for b in core.alloc.banks
+            if core.sched_for(b.index).would_refresh(b)}
+        decisions = mtr.account_refresh(core, duration_s,
+                                        placements=placements)
 
         pulses = [p for ps in placements.values() for p in ps]
         # p.rows is the pulse multiplicity (an aggregated preempting run
@@ -244,7 +247,8 @@ def stage_timeline(arm: Arm, ctx: SimContext) -> None:
         freq_hz=ctx.freq_hz or cfg.freq_hz, sample_scale=ctx.batch,
         retention_s=retention, granularity=cfg.refresh_granularity,
         reads_restore=cfg.reads_restore,
-        recorder=ctx.recorder, backend=cfg.replay_backend)
+        recorder=ctx.recorder, backend=cfg.replay_backend,
+        tiers=cfg.tiers)
 
 
 TIMELINE_PIPELINE = DEFAULT_PIPELINE.with_stage("memory", stage_timeline)

@@ -1,0 +1,177 @@
+"""Property tests for the hybrid SRAM+eDRAM :class:`MemorySystem`
+(``repro.memory.tiers``): across random place/free sequences and random
+tiered trace replays —
+
+- a tensor's spans live in exactly **one** tier (partial cross-tier
+  placements would split a BFP group's shared exponent from its
+  mantissas),
+- per-bank and per-tier occupancy never exceed capacity, and frees
+  return every word,
+- SRAM-resident banks never refresh (zero pulses, zero pulse energy),
+- the per-tier energy summaries sum **exactly** (``==``, not approx) to
+  the controller totals, under both stall models.
+
+The concrete seeded grid always runs; when ``hypothesis`` is installed
+the same properties run under its shrinker as well (the container has
+none, so the suite adds no dependency on it).
+"""
+import math
+import random
+
+import pytest
+
+from repro.core import edram as ed
+from repro.core.schedule import TraceEvent
+from repro.memory import MemorySystem, iso_area_tiers, replay
+from repro.sim.timeline import replay_timeline
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - container has none
+    HAVE_HYPOTHESIS = False
+
+CFG = ed.EDRAMConfig()
+WORD = CFG.word_bits
+RETENTION = 3.4e-6                     # the 100 °C eDRAM floor
+SRAM_BANK_BITS = 48 * 1024 * 8        # largest SRAM tier bank (s=1)
+
+
+def _random_system(rng) -> MemorySystem:
+    tiers = iso_area_tiers(CFG, rng.choice([0.125, 0.25, 0.5, 0.75]))
+    rets = [RETENTION if t.cell == "edram" else math.inf for t in tiers]
+    return MemorySystem(tiers, rets,
+                        policy=rng.choice(["lifetime_tiered",
+                                           "tiered_first_fit"]))
+
+
+def _check_occupancy(ms: MemorySystem) -> None:
+    for b in ms.banks:
+        assert 0 <= b.used_words <= b.geometry.words_per_bank
+    for k, t in enumerate(ms.tiers):
+        assert sum(b.occupied_bits for b in ms.tier_banks(k)) \
+            <= t.capacity_bits
+
+
+# -------------------------------------------------- allocation properties
+
+def _run_alloc_seed(seed: int) -> None:
+    rng = random.Random(seed)
+    ms = _random_system(rng)
+    live: list = []
+    for k in range(120):
+        now = k * 1e-6
+        if live and rng.random() < 0.4:
+            t = live.pop(rng.randrange(len(live)))
+            (ms.evict if rng.random() < 0.2 else ms.free)(t, now)
+        else:
+            name = f"t{k}"
+            bits = float(rng.randrange(WORD, 2 * SRAM_BANK_BITS))
+            ttl = rng.choice([None, RETENTION / 4, RETENTION * 100])
+            p = ms.place(name, bits, now, expected_lifetime_s=ttl)
+            if p.spans:
+                live.append(name)
+                # one tier per tensor, and tier_of_tensor agrees with
+                # the spans' global bank indices
+                owners = {ms.tier_of_bank(i) for i, _ in p.spans}
+                assert owners == {ms.tier_of_tensor(name)}
+            else:
+                assert name in ms.spilled
+        _check_occupancy(ms)
+    for t in live:
+        ms.free(t, 1.0)
+    # frees return every word across every tier
+    assert ms.used_bits == 0.0
+    assert all(f == 0.0 for f in ms.occupancy())
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_fuzz_tiered_allocation_invariants(seed):
+    _run_alloc_seed(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**9))
+    def test_fuzz_tiered_allocation_invariants_hypothesis(seed):
+        _run_alloc_seed(seed)
+
+
+# ----------------------------------------------------- replay properties
+
+def _random_trace(rng, *, n_ops=24, n_tensors=10, duration_s=1e-3):
+    """A random well-formed trace (the ``test_replay_backends`` shape,
+    sized so tensors land in both tiers and some spill)."""
+    dt = duration_s / n_ops
+    schedule = [(f"op{k}", k * dt, k * dt + (0.0 if rng.random() < 0.15
+                                             else dt))
+                for k in range(n_ops)]
+    events = []
+    for j in range(n_tensors):
+        birth = rng.randrange(n_ops)
+        death = rng.randrange(birth, n_ops)
+        bits = float(rng.randrange(WORD, 3 * SRAM_BANK_BITS))
+        buffered = rng.random() < 0.3
+        name = f"t{j}"
+        out = [TraceEvent(birth * dt, f"op{birth}", name,
+                          "alloc" if rng.random() < 0.2 else "write",
+                          bits, buffered=buffered)]
+        for _ in range(rng.randrange(0, 3)):
+            k = rng.randrange(birth, death + 1)
+            out.append(TraceEvent(k * dt, f"op{k}", name,
+                                  "read" if rng.random() < 0.7
+                                  else "write", bits, buffered=buffered))
+        out.sort(key=lambda e: e.time)
+        if rng.random() < 0.7:
+            out.append(TraceEvent(death * dt, f"op{death}", name, "free",
+                                  bits, buffered=buffered))
+        events.extend(out)
+    events.sort(key=lambda e: e.time)
+    return events, schedule, duration_s
+
+
+def _check_report(rep) -> None:
+    assert rep.tiers, "tiered replay must carry per-tier summaries"
+    for key in ("read_j", "write_j", "restore_j", "refresh_read_j",
+                "refresh_restore_j", "refresh_count", "refresh_stall_s",
+                "refresh_hidden_j"):
+        assert sum(t[key] for t in rep.tiers) == getattr(rep, key), key
+    assert sum(t["n_banks"] for t in rep.tiers) == len(rep.banks)
+    for t in rep.tiers:
+        assert t["refresh_j"] == t["refresh_read_j"] + \
+            t["refresh_restore_j"]
+        if t["cell"] == "sram":
+            # SRAM never pulses: no refresh work, energy, or stall
+            assert t["refresh_count"] == 0
+            assert t["refresh_read_j"] == t["refresh_restore_j"] == 0.0
+            assert t["refresh_stall_s"] == 0.0
+
+
+def _run_replay_seed(seed: int) -> None:
+    rng = random.Random(seed)
+    events, schedule, duration_s = _random_trace(rng)
+    tiers = iso_area_tiers(CFG, rng.choice([0.125, 0.25, 0.5]))
+    kw = dict(temp_c=rng.choice([60.0, 100.0]), duration_s=duration_s,
+              refresh_policy=rng.choice(["always", "selective"]),
+              alloc_policy=rng.choice(["lifetime_tiered",
+                                       "tiered_first_fit"]),
+              freq_hz=500e6,
+              granularity=rng.choice(["bank", "row"]),
+              tiers=tiers)
+    durations = {n: e - s for n, s, e in schedule}
+    _check_report(replay(events, CFG, op_durations=durations, **kw))
+    _check_report(replay_timeline(events, CFG, op_schedule=schedule,
+                                  **kw))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_fuzz_tiered_replay_invariants(seed):
+    _run_replay_seed(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**9))
+    def test_fuzz_tiered_replay_invariants_hypothesis(seed):
+        _run_replay_seed(seed)

@@ -29,7 +29,8 @@ def mode_tag(m: dict) -> str:
     # the tool runs without PYTHONPATH=src)
     return (m["granularity"]
             + ("+vector" if m.get("backend") == "vector" else "")
-            + ("+trace" if m.get("traced") else ""))
+            + ("+trace" if m.get("traced") else "")
+            + ("+tiered" if m.get("tiered") else ""))
 
 
 def best_committed(record_path: pathlib.Path) -> dict:

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""CI gate for the iso-area SRAM:eDRAM tier sweep.
+
+Usage: check_tier_sweep.py FRESH_JSON [--record BENCH_tiers.json]
+
+FRESH_JSON is a ``python -m benchmarks.tier_sweep --json`` dump from the
+current checkout.  The gate asserts the physical claims the hybrid-tier
+subsystem exists to show (see ``benchmarks/tier_sweep.py``):
+
+- **grid shape** — at least three splits, including both homogeneous
+  endpoints (``s=0`` all-eDRAM, ``s=1`` all-SRAM);
+- **endpoint delegation** — the ``s=0`` row ran the registered
+  ``DuDNN+CAMEL`` arm and the ``s=1`` row the registered ``FR+SRAM``
+  arm (``sim.hybrid_arm`` returns the homogeneous arms themselves at
+  the endpoints, so they can never drift from the Fig-24 records);
+- **iso-area** — every row satisfies ``edram_kb + 2*sram_kb == 384``
+  (the stock 12×32 KB array at ``density_vs_sram=2``);
+- **monotone leakage** — static tier leakage strictly increases with
+  the SRAM share (SRAM cells leak more per kB);
+- **refresh dies at s=1** — the all-SRAM endpoint reports exactly zero
+  refresh energy and ``refresh_free=true``;
+- **interior win** — some interior split's total energy is strictly
+  below *both* endpoints;
+- **trajectory match** (when ``--record`` exists) — splits present in
+  the latest committed record reproduce its energy to 1e-9 relative
+  (the sim is deterministic; a drift here means the model changed
+  without a ``--update`` record).
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_RECORD = REPO / "BENCH_tiers.json"
+
+TOTAL_KB = 384.0          # stock eDRAM array: 12 banks x 32 KB
+DENSITY_VS_SRAM = 2.0     # eDRAM kB per SRAM kB at equal area
+
+
+def _check(ok: bool, label: str, detail: str) -> int:
+    print(f"{'ok ' if ok else 'FAIL'}: {label}  {detail}")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", type=pathlib.Path,
+                    help="fresh sweep dump (--json output)")
+    ap.add_argument("--record", type=pathlib.Path, default=DEFAULT_RECORD,
+                    help="committed trajectory file (default: "
+                         "BENCH_tiers.json at the repo root)")
+    args = ap.parse_args(argv)
+
+    ms = sorted(json.loads(args.fresh.read_text())["measurements"],
+                key=lambda m: m["split"])
+    failures = 0
+
+    splits = [m["split"] for m in ms]
+    failures += _check(
+        len(ms) >= 3 and splits[0] == 0.0 and splits[-1] == 1.0,
+        "grid", f"splits={splits}")
+
+    lo, hi = ms[0], ms[-1]
+    failures += _check(lo["arm"] == "DuDNN+CAMEL",
+                       "endpoint s=0", f"arm={lo['arm']}")
+    failures += _check(hi["arm"] == "FR+SRAM",
+                       "endpoint s=1", f"arm={hi['arm']}")
+
+    iso = all(abs(m["edram_kb"] + DENSITY_VS_SRAM * m["sram_kb"]
+                  - TOTAL_KB) < 1e-9 for m in ms)
+    failures += _check(iso, "iso-area",
+                       f"edram_kb + {DENSITY_VS_SRAM:g}*sram_kb == "
+                       f"{TOTAL_KB:g} on every row")
+
+    leak = [m["leakage_mw"] for m in ms]
+    failures += _check(all(b > a for a, b in zip(leak, leak[1:])),
+                       "monotone leakage",
+                       "->".join(f"{v:.3f}" for v in leak) + " mW")
+
+    failures += _check(hi["refresh_j"] == 0.0 and hi["refresh_free"],
+                       "refresh->0 at s=1",
+                       f"refresh_j={hi['refresh_j']:g};"
+                       f"refresh_free={hi['refresh_free']}")
+
+    interior = [m for m in ms if 0.0 < m["split"] < 1.0]
+    best = min(interior, key=lambda m: m["energy_j"]) if interior else None
+    failures += _check(
+        best is not None and best["energy_j"] < lo["energy_j"]
+        and best["energy_j"] < hi["energy_j"],
+        "interior win",
+        (f"s{best['split']:g}@{best['energy_j']:.4e}J < "
+         f"endpoints {lo['energy_j']:.4e}/{hi['energy_j']:.4e}J"
+         if best else "no interior split in the grid"))
+
+    if args.record.exists():
+        committed = {m["split"]: m
+                     for m in json.loads(args.record.read_text())
+                     ["records"][-1]["measurements"]}
+        matched = [m for m in ms if m["split"] in committed]
+        drift = [m["split"] for m in matched
+                 if abs(m["energy_j"] - committed[m["split"]]["energy_j"])
+                 > 1e-9 * committed[m["split"]]["energy_j"]]
+        failures += _check(bool(matched) and not drift,
+                           "trajectory match",
+                           f"{len(matched)} split(s) vs latest committed "
+                           f"record; drifted={drift}")
+    else:
+        print(f"note: no committed record at {args.record}; trajectory "
+              "check skipped")
+
+    if failures:
+        print(f"{failures} tier-sweep check(s) failed")
+        return 1
+    print("all tier-sweep checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
